@@ -1,0 +1,59 @@
+"""Paper-adjacent ablations: the two Cascade hyperparameters with a
+quality/resource trade-off.
+
+* placement alpha (Eq. 1 criticality exponent) sweep — Section V-C
+* post-PnR register budget sweep — Section V-D ("number of registers added
+  vs critical path" trade-off the paper describes for broadcast/post-PnR)
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.apps import ALL_APPS
+from repro.core.compiler import CascadeCompiler, PassConfig
+
+MOVES = 100
+
+
+def alpha_sweep(app: str = "harris") -> List[Dict]:
+    c = CascadeCompiler()
+    rows = []
+    for alpha in (1.0, 1.3, 1.6, 2.0, 2.5):
+        cfg = PassConfig.full(place_moves=MOVES, placement_alpha=alpha,
+                              seed=1)
+        r = c.compile(ALL_APPS[app], cfg)
+        rows.append({"app": app, "alpha": alpha,
+                     "critical_path_ns": round(r.sta.critical_path_ns, 3),
+                     "freq_mhz": round(r.sta.max_freq_mhz, 1),
+                     "registers": r.design.physical_register_count()})
+    print("\n== ablation: placement alpha (Eq. 1) ==")
+    cols = list(rows[0])
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r[k]) for k in cols))
+    return rows
+
+
+def budget_sweep(app: str = "unsharp") -> List[Dict]:
+    c = CascadeCompiler()
+    rows = []
+    for budget in (0, 8, 32, 128, 512):
+        cfg = PassConfig.full(place_moves=MOVES, post_pnr_budget=budget,
+                              seed=1)
+        r = c.compile(ALL_APPS[app], cfg)
+        rows.append({"app": app, "register_budget": budget,
+                     "critical_path_ns": round(r.sta.critical_path_ns, 3),
+                     "freq_mhz": round(r.sta.max_freq_mhz, 1),
+                     "regs_added": (r.post_pnr.registers_added
+                                    if r.post_pnr else 0)})
+    print("\n== ablation: post-PnR register budget ==")
+    cols = list(rows[0])
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r[k]) for k in cols))
+    return rows
+
+
+def run_all() -> Dict[str, List[Dict]]:
+    return {"alpha": alpha_sweep(), "budget": budget_sweep()}

@@ -1,0 +1,36 @@
+"""Regenerate the EXPERIMENTS.md §Roofline markdown table from the dry-run
+artifacts (run after a fresh `dryrun --all` sweep)."""
+
+import glob
+import json
+
+
+def main():
+    rows = []
+    for f in sorted(glob.glob("experiments/dryrun/*_16x16.json")):
+        d = json.load(open(f))
+        if d.get("mesh") != "16x16":
+            continue
+        if "skipped" in d:
+            rows.append(f"| {d['arch']} | {d['shape']} | — | — | — | SKIP "
+                        f"| — | — |")
+            continue
+        r = d["roofline"]
+        args_gb = d.get("memory", {}).get(
+            "args_bytes_exact",
+            d.get("memory", {}).get("argument_size_in_bytes", 0)) / 1e9
+        u = d.get("useful_flop_ratio", "—")
+        fr = d.get("roofline_fraction", "—")
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | {r['compute_s']:.4g} "
+            f"| {r['memory_s']:.4g} | {r['collective_s']:.4g} "
+            f"| **{r['bound']}** | {args_gb:.2f} | {u} / {fr} |")
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | bound "
+           "| state GB/dev | useful / frac |\n"
+           "|---|---|---|---|---|---|---|---|")
+    print(hdr)
+    print("\n".join(rows))
+
+
+if __name__ == "__main__":
+    main()

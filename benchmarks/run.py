@@ -1,0 +1,78 @@
+"""Benchmark driver: one module per paper table/figure + the roofline and
+beyond-paper benches.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+
+Prints CSV blocks per artifact and a final band-check against the paper's
+headline claims.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _band(name: str, lo, hi, values, allow_slack=0.0) -> str:
+    vmin, vmax = min(values), max(values)
+    ok = vmin >= lo * (1 - allow_slack)
+    return (f"  {name:34s} paper {lo}-{hi}x   ours {vmin:.1f}-{vmax:.1f}x   "
+            f"{'OK' if ok else 'BELOW BAND'}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="cascade|lm|roofline|pipeline")
+    args = ap.parse_args()
+    t0 = time.time()
+    results = {}
+
+    if args.only in (None, "cascade"):
+        from benchmarks import cascade_tables
+        results.update(cascade_tables.run_all())
+
+    if args.only in (None, "lm"):
+        from benchmarks import lm_lowering
+        results["lm_lowering"] = lm_lowering.run_all()
+
+    if args.only in (None, "pipeline"):
+        from benchmarks import pipeline_partition
+        results["pipeline"] = pipeline_partition.run_all()
+
+    if args.only in (None, "ablations"):
+        from benchmarks import ablations
+        results["ablations"] = ablations.run_all()
+
+    if args.only in (None, "roofline"):
+        from benchmarks import roofline
+        results["roofline"] = roofline.run_all()
+
+    # ----- headline band checks (paper abstract) -------------------------
+    if "dense_table" in results:
+        print("\n== Paper band check ==")
+        dt = results["dense_table"]
+        print(_band("dense critical-path ratio", 7, 34,
+                    [r["cp_ratio"] for r in dt], allow_slack=0.05))
+        print(_band("dense EDP ratio", 7, 190,
+                    [r["edp_ratio"] for r in dt], allow_slack=0.05))
+        st = results["sparse_table"]
+        print(_band("sparse critical-path ratio", 2, 4.4,
+                    [r["cp_ratio"] for r in st], allow_slack=0.1))
+        print(_band("sparse EDP ratio", 1.5, 4.2,
+                    [r["edp_ratio"] for r in st], allow_slack=0.1))
+        fh = results["flush_hardening"]
+        drops = [r["runtime_drop_pct"] for r in fh]
+        print(f"  {'flush hardening runtime drop':34s} paper 31-56%   "
+              f"ours {min(drops):.0f}-{max(drops):.0f}%")
+        sa = [r for r in results["sta_accuracy"] if r["app"] == "MEAN>500MHz"]
+        if sa:
+            print(f"  {'STA err above 500 MHz':34s} paper ~13%     "
+                  f"ours {sa[0]['err_pct']}%")
+
+    print(f"\n[benchmarks] total {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

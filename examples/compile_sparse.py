@@ -1,0 +1,43 @@
+"""Sparse (ready-valid) pipelining walkthrough: Tensor TTV through the
+FIFO-insertion flow, with token-level simulation proving stream equivalence.
+
+    PYTHONPATH=src python examples/compile_sparse.py
+"""
+
+import numpy as np
+
+from repro.core.apps import ALL_APPS
+from repro.core.compiler import CascadeCompiler, PassConfig
+from repro.core.dfg import INPUT
+from repro.core.sim import simulate_sparse
+
+
+def main():
+    compiler = CascadeCompiler()
+    app = ALL_APPS["ttv"]
+    print(f"== sparse pipelining: {app.name} ==")
+
+    # compute-pipelining-only baseline (sparse apps carry input FIFOs by
+    # construction, Section VIII-D) vs the full flow
+    base = compiler.compile(app, PassConfig(
+        broadcast_pipelining=False, placement_alpha=1.0, post_pnr=False,
+        low_unroll_dup=False))
+    full = compiler.compile(app, PassConfig.full())
+    print(f"compute-only: {base.summary()}")
+    print(f"full        : {full.summary()}")
+    print(f"critical path ratio {base.sta.critical_path_ns / full.sta.critical_path_ns:.2f}x "
+          f"(paper sparse band 2-4.4x vs unpipelined)")
+
+    # token-level equivalence: FIFO insertion must not change the streams
+    g_ref = app.build(1)
+    rng = np.random.default_rng(0)
+    ins = {n: rng.integers(0, 99, size=16).tolist()
+           for n, nd in g_ref.nodes.items() if nd.kind == INPUT}
+    out_ref = simulate_sparse(g_ref, ins)
+    out_full = simulate_sparse(full.design.netlist.to_dfg(), ins)
+    assert out_ref == out_full, "ready-valid streams must be preserved"
+    print("token streams identical after FIFO pipelining: OK")
+
+
+if __name__ == "__main__":
+    main()

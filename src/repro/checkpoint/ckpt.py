@@ -1,0 +1,156 @@
+"""Checkpointing: manifest + per-leaf npz shards, atomic, reshard-on-restore.
+
+Layout:
+    <dir>/step_000123.tmp-<nonce>/   (written, then atomically renamed)
+    <dir>/step_000123/
+        MANIFEST.json     {step, leaf paths, shapes, dtypes, tree structure}
+        <leaf>.npy        one file per pytree leaf
+
+Restore takes a target sharding tree: leaves are loaded on host then
+device_put with the *new* shardings, so a checkpoint written on one mesh
+restores onto any other mesh (elastic rescale) — resharding is a host-side
+gather + device_put, the standard single-controller recovery path.
+
+Fault-tolerance contract: a checkpoint directory either exists completely
+(rename is atomic) or not at all; `latest_step` never sees partial state.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+import threading
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+Tree = Any
+
+_SEP = "__"
+
+
+def _path_strs(tree: Tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = []
+    for kp, _ in flat:
+        parts = []
+        for k in kp:
+            if hasattr(k, "key"):
+                parts.append(str(k.key))
+            elif hasattr(k, "idx"):
+                parts.append(str(k.idx))
+            elif hasattr(k, "name"):
+                parts.append(str(k.name))
+            else:
+                parts.append(str(k))
+        paths.append(_SEP.join(parts))
+    return [l for _, l in flat], paths, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree: Tree) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(prefix=f"step_{step:08d}.tmp-", dir=directory)
+    leaves, paths, _ = _path_strs(tree)
+    manifest = {"step": step, "leaves": []}
+    for leaf, path in zip(leaves, paths):
+        arr = np.asarray(jax.device_get(leaf))
+        dtype = str(arr.dtype)
+        if dtype == "bfloat16":            # npy has no bf16: store raw bits
+            arr = arr.view(np.uint16)
+        fname = re.sub(r"[^A-Za-z0-9_.-]", "_", path) + ".npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append({"path": path, "file": fname,
+                                   "shape": list(arr.shape),
+                                   "dtype": dtype})
+    with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                      # atomic publish
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(directory)
+             if (m := re.fullmatch(r"step_(\d+)", d))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, like: Tree,
+                       shardings: Optional[Tree] = None) -> Tree:
+    """Restore into the structure of `like` (arrays or ShapeDtypeStructs);
+    `shardings` (same tree of NamedSharding) reshard onto the current mesh."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+    leaves, paths, treedef = _path_strs(like)
+    out = []
+    shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                    else [None] * len(leaves))
+    for leaf, p, shd in zip(leaves, paths, shard_leaves):
+        entry = by_path[p]
+        arr = np.load(os.path.join(path, entry["file"]))
+        if entry["dtype"] == "bfloat16":
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        want = tuple(leaf.shape)
+        if tuple(arr.shape) != want:
+            raise ValueError(f"{p}: checkpoint shape {arr.shape} != {want}")
+        if shd is not None:
+            out.append(jax.device_put(arr, shd))
+        else:
+            out.append(jax.device_put(arr.astype(leaf.dtype)))
+    return jax.tree.unflatten(treedef, out)
+
+
+class CheckpointManager:
+    """Keeps the last `keep` checkpoints; optional async (background-thread)
+    saves so the training loop overlaps I/O with the next step."""
+
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, tree: Tree):
+        tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self.wait()
+
+        def run():
+            save_checkpoint(self.directory, step, tree)
+            self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=run, daemon=True)
+            self._thread.start()
+        else:
+            run()
+
+    def _gc(self):
+        steps = sorted(int(m.group(1)) for d in os.listdir(self.directory)
+                       if (m := re.fullmatch(r"step_(\d+)", d)))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def restore_latest(self, like: Tree, shardings: Optional[Tree] = None
+                       ) -> Tuple[Optional[int], Optional[Tree]]:
+        self.wait()
+        step = latest_step(self.directory)
+        if step is None:
+            return None, None
+        return step, restore_checkpoint(self.directory, step, like, shardings)

@@ -1,0 +1,45 @@
+"""Cascade core — the paper's contribution as a composable library.
+
+Public API:
+    Fabric, TimingModel, generate_timing_model
+    DFG and the pipelining passes (compute/broadcast/post-PnR, matching)
+    CascadeCompiler / PassConfig / CompileResult
+    DENSE_APPS / SPARSE_APPS benchmark suites
+"""
+
+from .apps import ALL_APPS, DENSE_APPS, SPARSE_APPS, AppSpec
+from .branch_delay import (arrival_cycles_dfg, check_matched_dfg,
+                           check_matched_netlist, match_dfg, match_netlist)
+from .broadcast import broadcast_pipelining
+from .compiler import CascadeCompiler, CompileResult, PassConfig
+from .dfg import DFG
+from .flush import add_soft_flush, remove_flush
+from .interconnect import Fabric, Hop, Tile
+from .netlist import Netlist, RoutedDesign, extract_netlist
+from .pipelining import collapse_reg_chains, compute_pipelining
+from .place import PlaceParams, place, placement_stats
+from .post_pnr import PostPnRParams, post_pnr_pipeline
+from .power import EnergyParams, PowerReport, power_report
+from .route import RouteParams, route
+from .schedule import Schedule, schedule_round2
+from .sim import equivalent, simulate, simulate_sparse, sparse_equivalent
+from .sta import STAReport, analyze, sdf_simulate_fmax
+from .timing_model import TECH_NS, TimingModel, generate_timing_model
+from .unroll import max_copies, subfabric_for
+
+__all__ = [
+    "ALL_APPS", "DENSE_APPS", "SPARSE_APPS", "AppSpec",
+    "CascadeCompiler", "CompileResult", "PassConfig",
+    "DFG", "Fabric", "Hop", "Tile", "Netlist", "RoutedDesign",
+    "TimingModel", "TECH_NS", "generate_timing_model",
+    "analyze", "sdf_simulate_fmax", "STAReport",
+    "match_dfg", "match_netlist", "check_matched_dfg", "check_matched_netlist",
+    "arrival_cycles_dfg", "compute_pipelining", "collapse_reg_chains",
+    "broadcast_pipelining", "post_pnr_pipeline", "PostPnRParams",
+    "place", "PlaceParams", "placement_stats", "route", "RouteParams",
+    "extract_netlist", "Schedule", "schedule_round2",
+    "EnergyParams", "PowerReport", "power_report",
+    "add_soft_flush", "remove_flush",
+    "simulate", "simulate_sparse", "equivalent", "sparse_equivalent",
+    "max_copies", "subfabric_for",
+]

@@ -1,0 +1,156 @@
+"""Branch delay matching (paper Section III-B).
+
+When pipelining registers are added to an application DAG, every multi-input
+functional element must see all of its operands arrive on the same cycle.
+The matching algorithm is STA run in the *cycle* domain: walk the graph in
+topological order computing per-node arrival cycles, and wherever a node has
+more than one unique input arrival time, insert registers (FIFOs for sparse
+designs) on the early branches.
+
+Two views are supported:
+
+``match_dfg``      operates on a DFG (used by the pre-PnR graph passes:
+                   compute pipelining, broadcast pipelining).
+``match_netlist``  operates on a Netlist's branch ``n_regs`` counts (used by
+                   post-PnR pipelining, where the registers live at concrete
+                   switch-box sites along routes).
+
+Edges driven by CONST nodes are time-invariant and never need matching.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Set, Tuple
+
+from .dfg import CONST, CONTROL_PORT, DFG, FIFO, INPUT, REG
+from .netlist import Branch, Netlist
+
+
+def _data_in_edges(g: DFG, name: str):
+    return [e for e in g.in_edges(name)
+            if e.port < CONTROL_PORT and g.nodes[e.src].kind != CONST]
+
+
+def arrival_cycles_dfg(g: DFG, domain: str = "pipeline") -> Dict[str, int]:
+    arr: Dict[str, int] = {}
+    for name in g.topo_order():
+        node = g.nodes[name]
+        preds = [e.src for e in _data_in_edges(g, name)]
+        base = max((arr[p] for p in preds), default=0)
+        lat = (node.pipeline_latency() if domain == "pipeline"
+               else node.cycle_latency())
+        arr[name] = base + lat
+    return arr
+
+
+def match_dfg(g: DFG, use_fifos: Optional[bool] = None) -> int:
+    """Insert matching registers in-place; returns #registers inserted.
+
+    Processes nodes in topological order so one pass suffices: by the time a
+    node is visited, all upstream arrival times are final.
+    """
+    use_fifos = g.sparse if use_fifos is None else use_fifos
+    kind = FIFO if use_fifos else REG
+    inserted = 0
+    arr: Dict[str, int] = {}
+    for name in g.topo_order():
+        node = g.nodes[name]
+        in_edges = _data_in_edges(g, name)
+        if in_edges:
+            arrivals = [arr[e.src] for e in in_edges]
+            target = max(arrivals)
+            for e, a in zip(list(in_edges), arrivals):
+                need = target - a
+                for _ in range(need):
+                    mid = g.split_edge(e, kind,
+                                       depth=2 if use_fifos else 1)
+                    g.nodes[mid].meta["pipelining"] = True
+                    # the chain grows from src side; next insertion goes on
+                    # the edge between the new node and the sink
+                    e = [ee for ee in g.in_edges(name) if ee.src == mid][0]
+                    arr[mid] = a + 1
+                    a += 1
+                    inserted += 1
+            arr_in = target
+        else:
+            arr_in = 0
+        arr[name] = arr_in + node.pipeline_latency()
+    return inserted
+
+
+def check_matched_dfg(g: DFG) -> bool:
+    """True iff every multi-input node sees equal input arrival cycles."""
+    arr = arrival_cycles_dfg(g)
+    for name in g.nodes:
+        arrivals = {arr[e.src] for e in _data_in_edges(g, name)}
+        if len(arrivals) > 1:
+            return False
+    return True
+
+
+def match_netlist(nl: Netlist) -> int:
+    """Cycle-match by incrementing branch ``n_regs``; returns #regs added.
+
+    Sparse netlists self-synchronize through ready-valid FIFOs, so matching
+    is a rate optimization there rather than a correctness requirement — the
+    same counts are used either way (paper Section VII).
+    """
+    into: Dict[str, List[Branch]] = {n: [] for n in nl.nodes}
+    for b in nl.branches:
+        if not b.control:
+            into[b.sink].append(b)
+    arr: Dict[str, int] = {}
+    added = 0
+    # topological order
+    indeg = {n: 0 for n in nl.nodes}
+    adj: Dict[str, List[str]] = {n: [] for n in nl.nodes}
+    for b in nl.branches:
+        indeg[b.sink] += 1
+        adj[b.driver].append(b.sink)
+    stack = sorted(n for n, d in indeg.items() if d == 0)
+    order: List[str] = []
+    while stack:
+        n = stack.pop()
+        order.append(n)
+        for m in adj[n]:
+            indeg[m] -= 1
+            if indeg[m] == 0:
+                stack.append(m)
+    for name in order:
+        node = nl.nodes[name]
+        ins = into[name]
+        if ins:
+            arrivals = [arr[b.driver] + b.n_regs for b in ins]
+            target = max(arrivals)
+            for b, a in zip(ins, arrivals):
+                if a < target:
+                    b.n_regs += target - a
+                    added += target - a
+            arr_in = target
+        else:
+            arr_in = 0
+        arr[name] = arr_in + node.pipeline_latency()
+
+    # control broadcasts (flush) must hit every destination on the same
+    # cycle: registering one branch forces a register onto *all* branches of
+    # the same net (paper Section VI — this is what makes the software
+    # approach so register-hungry).
+    by_ctrl_driver: Dict[str, List[Branch]] = {}
+    for b in nl.branches:
+        if b.control:
+            by_ctrl_driver.setdefault(b.driver, []).append(b)
+    for branches in by_ctrl_driver.values():
+        target = max(b.n_regs for b in branches)
+        for b in branches:
+            added += target - b.n_regs
+            b.n_regs = target
+    return added
+
+
+def check_matched_netlist(nl: Netlist) -> bool:
+    arr = nl.arrival_cycles(domain="pipeline")
+    into: Dict[str, Set[int]] = {}
+    for b in nl.branches:
+        if not b.control:
+            into.setdefault(b.sink, set()).add(arr[b.driver] + b.n_regs)
+    return all(len(s) <= 1 for s in into.values())

@@ -1,0 +1,183 @@
+"""CascadeCompiler — the end-to-end application compiler of paper Fig. 2.
+
+    app spec -> DFG -> [compute pipelining] -> [broadcast pipelining]
+             -> netlist -> place (Eq. 1, alpha) -> route -> [post-PnR
+             pipelining] -> schedule round 2 -> bitstream/report
+
+Every Cascade technique is individually toggleable (``PassConfig``) so the
+benchmarks can reproduce the paper's incremental figures (Fig. 7/10), and the
+flush broadcast can be routed in software (baseline) or hardened (Section VI).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field, replace as dc_replace
+from typing import Dict, Optional
+
+from .apps import AppSpec
+from .branch_delay import check_matched_netlist, match_dfg
+from .broadcast import broadcast_pipelining
+from .dfg import DFG, PE
+from .flush import FLUSH, add_soft_flush
+from .interconnect import Fabric
+from .netlist import Netlist, RoutedDesign, extract_netlist
+from .pipelining import compute_pipelining
+from .place import PlaceParams, place
+from .post_pnr import PostPnRParams, PostPnRResult, post_pnr_pipeline
+from .power import EnergyParams, PowerReport, power_report
+from .route import RouteParams, route
+from .schedule import Schedule, schedule_round2
+from .sim import equivalent
+from .sta import STAReport, analyze
+from .timing_model import TimingModel, generate_timing_model
+from .unroll import max_copies, subfabric_for
+
+
+@dataclass
+class PassConfig:
+    compute_pipelining: bool = True
+    rf_threshold: int = 4
+    broadcast_pipelining: bool = True
+    broadcast_fanout: int = 4
+    broadcast_arity: int = 4
+    placement_alpha: float = 1.6      # Cascade criticality exponent
+    placement_gamma: float = 0.3
+    post_pnr: bool = True
+    post_pnr_budget: Optional[int] = None   # None -> fabric-derived default
+    post_pnr_iters: int = 400
+    low_unroll_dup: bool = True
+    harden_flush: bool = True
+    seed: int = 0
+    place_moves: int = 400            # per node
+
+    @classmethod
+    def unpipelined(cls, **kw) -> "PassConfig":
+        """The baseline compiler: no pipelining techniques at all."""
+        return cls(compute_pipelining=False, broadcast_pipelining=False,
+                   placement_alpha=1.0, post_pnr=False, low_unroll_dup=False,
+                   harden_flush=False, **kw)
+
+    @classmethod
+    def full(cls, **kw) -> "PassConfig":
+        return cls(**kw)
+
+
+@dataclass
+class CompileResult:
+    app: AppSpec
+    config: PassConfig
+    design: RoutedDesign
+    sta: STAReport
+    schedule: Schedule
+    power: PowerReport
+    pass_stats: Dict[str, object] = field(default_factory=dict)
+    post_pnr: Optional[PostPnRResult] = None
+    compile_seconds: float = 0.0
+
+    def summary(self) -> dict:
+        return {
+            "app": self.app.name,
+            "critical_path_ns": round(self.sta.critical_path_ns, 3),
+            **self.power.scaled(),
+            "registers": self.design.physical_register_count(),
+            "unroll_copies": self.design.unroll_copies,
+        }
+
+
+class CascadeCompiler:
+    def __init__(self, fabric: Optional[Fabric] = None,
+                 timing: Optional[TimingModel] = None,
+                 energy: Optional[EnergyParams] = None):
+        self.fabric = fabric or Fabric()
+        self.timing = timing or generate_timing_model(self.fabric)
+        self.energy = energy or EnergyParams()
+
+    def compile(self, app: AppSpec, config: Optional[PassConfig] = None,
+                unroll: Optional[int] = None, verify: bool = False) -> CompileResult:
+        cfg = config or PassConfig()
+        t0 = time.time()
+        pass_stats: Dict[str, object] = {}
+
+        if unroll is None:
+            unroll = (app.unroll if (cfg.compute_pipelining or cfg.post_pnr)
+                      else (app.unroll_baseline or app.unroll))
+
+        # -- graph construction (low unrolling duplication, Section V-E) ----
+        if cfg.low_unroll_dup and not app.sparse:
+            g = app.build(1)
+            copies = unroll
+        else:
+            g = app.build(unroll)
+            copies = 1
+
+        # -- graph-level pipelining passes ----------------------------------
+        if cfg.compute_pipelining or app.sparse:
+            # sparse apps carry input FIFOs by construction: compute
+            # pipelining is always on for them (Section VIII-D)
+            if not app.sparse:
+                pass_stats["compute"] = compute_pipelining(g, cfg.rf_threshold)
+            else:
+                pass_stats["compute"] = {"sparse_default_fifos": True}
+        if cfg.broadcast_pipelining and not app.sparse:
+            pass_stats["broadcast"] = broadcast_pipelining(
+                g, cfg.broadcast_fanout, cfg.broadcast_arity)
+        if not cfg.harden_flush and not app.sparse:
+            pass_stats["flush_fanout"] = add_soft_flush(g)
+
+        source_dfg = g.copy()
+
+        # -- place & route ---------------------------------------------------
+        nl = extract_netlist(g)
+        if cfg.low_unroll_dup and not app.sparse:
+            fabric = subfabric_for(nl, self.fabric)
+            copies = min(copies, max_copies(nl, self.fabric, fabric))
+        else:
+            fabric = self.fabric
+        tm = generate_timing_model(fabric) if fabric is not self.fabric else self.timing
+        pp = PlaceParams(alpha=cfg.placement_alpha, gamma=cfg.placement_gamma,
+                         seed=cfg.seed, moves_per_node=cfg.place_moves)
+        placement = place(nl, fabric, pp)
+        design = route(nl, placement, fabric)
+        design.unroll_copies = copies
+        design.source_dfg = source_dfg
+
+        # -- post-PnR pipelining (Section V-D) -------------------------------
+        ppr = None
+        if cfg.post_pnr:
+            budget = cfg.post_pnr_budget
+            if budget is None:
+                budget = fabric.rows * fabric.cols // 2
+            ppr = post_pnr_pipeline(design, tm, PostPnRParams(
+                max_iters=cfg.post_pnr_iters, register_budget=budget))
+            pass_stats["post_pnr"] = {
+                "initial_ns": ppr.initial_ns, "final_ns": ppr.final_ns,
+                "registers_added": ppr.registers_added,
+                "stop": ppr.stop_reason}
+
+        if not app.sparse and not check_matched_netlist(nl):
+            raise AssertionError(f"{app.name}: branch delays unmatched after flow")
+
+        # -- schedule round 2 + reports --------------------------------------
+        rep = analyze(design, tm)
+        iters = app.iterations_for(copies if copies > 1 else unroll)
+        stall = 0.12 if app.sparse else 0.0
+        sched = schedule_round2(design, iters, stall_factor=stall)
+        pwr = power_report(design, rep.max_freq_mhz, sched, self.energy)
+
+        if verify and not app.sparse:
+            ref = app.build(1 if (cfg.low_unroll_dup and not app.sparse) else unroll)
+            import numpy as _np
+            rng = _np.random.default_rng(0)
+            ins = {n: rng.integers(0, 255, size=48).tolist()
+                   for n, nd in ref.nodes.items() if nd.kind == "input"}
+            final = design.netlist.to_dfg()
+            if not equivalent(ref, final, ins, n=32):
+                raise AssertionError(f"{app.name}: pipelined design is not "
+                                     f"functionally equivalent to the source app")
+            pass_stats["verified"] = True
+
+        return CompileResult(
+            app=app, config=cfg, design=design, sta=rep, schedule=sched,
+            power=pwr, pass_stats=pass_stats, post_pnr=ppr,
+            compile_seconds=time.time() - t0)

@@ -1,0 +1,61 @@
+"""Flush-signal handling (paper Section VI — hardware pipelining technique).
+
+Statically-scheduled CGRAs synchronize every memory controller with a global
+``flush`` broadcast at application start.  That signal has one source and as
+many destinations as the application has stateful tiles; routed through the
+configurable interconnect it becomes an unbreakable critical path (pipelining
+it in software would need one matching register per destination — far beyond
+the interconnect register budget).
+
+``add_soft_flush``  models the baseline: a 1-bit broadcast net from a flush IO
+                    to every stateful placeable node, routed on the
+                    interconnect and visible to STA.
+``harden_flush``    models the paper's hardware fix: the net is removed from
+                    the interconnect and carried by a dedicated, per-column
+                    registered distribution network that is never timing
+                    critical (its pipeline depth is absorbed into the start-up
+                    schedule, not the steady state).
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from .dfg import DFG, FIFO, INPUT, MEM, PE, RF
+
+FLUSH = "__flush__"
+
+
+def stateful_nodes(g: DFG) -> List[str]:
+    out = []
+    for n, nd in g.nodes.items():
+        if nd.kind in (MEM, RF, FIFO):
+            out.append(n)
+        elif nd.kind == PE and (nd.input_reg or nd.latency > 0):
+            out.append(n)
+    return out
+
+
+def add_soft_flush(g: DFG) -> int:
+    """Attach the software-routed flush broadcast; returns fanout."""
+    if FLUSH in g.nodes:
+        return g.fanout(FLUSH)
+    targets = stateful_nodes(g)
+    if not targets:
+        return 0
+    g.add(INPUT, name=FLUSH, width=1)
+    for t in targets:
+        nd = g.nodes[t]
+        port = 90 + len([e for e in g.in_edges(t)])  # side-band control port
+        g.connect(FLUSH, t, port=port, width=1)
+    return len(targets)
+
+
+def remove_flush(g: DFG):
+    """Hardened flush: drop the net from the interconnect model entirely."""
+    if FLUSH not in g.nodes:
+        return
+    for e in list(g.edges):
+        if e.src == FLUSH or e.dst == FLUSH:
+            g.edges.remove(e)
+    del g.nodes[FLUSH]

@@ -1,0 +1,112 @@
+"""CGRA fabric model — a Canal-style interconnect graph.
+
+Models the target CGRA class of the paper (Amber/AHA-like): a ``rows x cols``
+grid of PE and MEM tiles (every ``mem_col_stride``-th column is a MEM column;
+default 32x16 = 384 PE + 128 MEM tiles), IO tiles on the north edge,
+``tracks16``/``tracks1`` routing tracks per tile boundary per direction, a
+switch box in every tile with an optional pipelining register on every
+outgoing track in every direction, and single-cycle multi-hop routing.
+
+Routing resources are modelled at tile-boundary granularity: a directed hop
+(tile -> adjacent tile) consumes one track of the matching width and passes
+through the source tile's switch box.  This keeps everything the paper's
+results depend on — hop counts, per-tile-type delays, congestion, register
+sites per hop — while staying graph-level (no RTL).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Tuple
+
+Tile = Tuple[int, int]          # (row, col); row -1 = IO row on the north edge
+
+N, S, E, W = "N", "S", "E", "W"
+DIRS: Dict[str, Tile] = {N: (-1, 0), S: (1, 0), E: (0, 1), W: (0, -1)}
+
+
+@dataclass(frozen=True)
+class Hop:
+    """One directed tile-boundary crossing (through ``src``'s switch box)."""
+    src: Tile
+    dst: Tile
+
+    @property
+    def direction(self) -> str:
+        dr, dc = self.dst[0] - self.src[0], self.dst[1] - self.src[1]
+        return {(-1, 0): N, (1, 0): S, (0, 1): E, (0, -1): W}[(dr, dc)]
+
+
+@dataclass
+class Fabric:
+    rows: int = 32
+    cols: int = 16
+    mem_col_stride: int = 4          # every 4th column is a MEM column
+    tracks16: int = 5                # 16-bit tracks per boundary per direction
+    tracks1: int = 5                 # 1-bit tracks per boundary per direction
+    name: str = "amber32x16"
+
+    def tile_kind(self, t: Tile) -> str:
+        r, c = t
+        if r == -1:
+            return "io"
+        if not (0 <= r < self.rows and 0 <= c < self.cols):
+            raise ValueError(f"tile {t} outside fabric")
+        return "mem" if (c % self.mem_col_stride) == (self.mem_col_stride - 1) else "pe"
+
+    def tiles(self, kind: Optional[str] = None) -> List[Tile]:
+        out = []
+        if kind in (None, "io"):
+            out += [(-1, c) for c in range(self.cols)]
+        for r in range(self.rows):
+            for c in range(self.cols):
+                if kind is None or self.tile_kind((r, c)) == kind:
+                    out.append((r, c))
+        return out
+
+    def pe_tiles(self) -> List[Tile]:
+        return self.tiles("pe")
+
+    def mem_tiles(self) -> List[Tile]:
+        return self.tiles("mem")
+
+    def io_tiles(self) -> List[Tile]:
+        return [(-1, c) for c in range(self.cols)]
+
+    def in_bounds(self, t: Tile) -> bool:
+        r, c = t
+        return (r == -1 or 0 <= r < self.rows) and 0 <= c < self.cols
+
+    def neighbors(self, t: Tile) -> List[Tile]:
+        r, c = t
+        if r == -1:  # IO tiles connect only downward into their column
+            return [(0, c)]
+        out = []
+        for dr, dc in DIRS.values():
+            nt = (r + dr, c + dc)
+            if nt[0] == -1:
+                out.append(nt)
+            elif 0 <= nt[0] < self.rows and 0 <= nt[1] < self.cols:
+                out.append(nt)
+        return out
+
+    def track_capacity(self, width: int) -> int:
+        return self.tracks16 if width >= 16 else self.tracks1
+
+    def counts(self) -> dict:
+        return {
+            "pe": len(self.pe_tiles()),
+            "mem": len(self.mem_tiles()),
+            "io": len(self.io_tiles()),
+            "total": self.rows * self.cols,
+        }
+
+    def subfabric(self, rows: int, cols: int) -> "Fabric":
+        """A smaller window with the same column pattern (for low unrolling)."""
+        return Fabric(rows=rows, cols=cols, mem_col_stride=self.mem_col_stride,
+                      tracks16=self.tracks16, tracks1=self.tracks1,
+                      name=f"{self.name}_sub{rows}x{cols}")
+
+
+def manhattan(a: Tile, b: Tile) -> int:
+    return abs(a[0] - b[0]) + abs(a[1] - b[1])

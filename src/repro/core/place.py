@@ -1,0 +1,193 @@
+"""Simulated-annealing placement (paper Section V-C).
+
+Detailed-placement cost per net:
+
+    Cost_net = (HPWL_net + gamma * Area_passthrough)^alpha          (Eq. 1)
+
+``gamma`` penalizes pass-through tiles (tiles used only for routing,
+approximated pre-route by the net bounding-box interior) and ``alpha`` is the
+*criticality exponent* Cascade adds: with alpha > 1 long routes cost
+super-linearly more, trading total wirelength for shorter maximum net length
+(similar to timing-driven FPGA placement [Marquardt et al.]).
+
+Costs are maintained incrementally — a move only re-scores nets incident to
+the touched sites.  IO tiles host up to ``IO_CAPACITY`` streams each (the
+global buffer exposes several banks per array column).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .dfg import FIFO, INPUT, MEM, OUTPUT, PE, RF
+from .interconnect import Fabric, Tile
+from .netlist import Netlist
+
+# node kinds -> tile class they occupy
+TILE_CLASS = {PE: "pe", RF: "pe", FIFO: "pe", MEM: "mem",
+              INPUT: "io", OUTPUT: "io"}
+IO_CAPACITY = 4
+
+
+@dataclass
+class PlaceParams:
+    alpha: float = 1.0        # criticality exponent (1.0 = paper's baseline)
+    gamma: float = 0.3        # pass-through penalty
+    seed: int = 0
+    moves_per_node: int = 400 # total move budget = moves_per_node * n
+    t_factor: float = 0.92
+    restarts: int = 1
+
+
+class _Nets:
+    """Net terminals as index arrays for vectorized HPWL evaluation."""
+
+    def __init__(self, nl: Netlist):
+        by_driver: Dict[str, List[str]] = {}
+        for b in nl.branches:
+            by_driver.setdefault(b.driver, []).append(b.sink)
+        self.names = list(nl.nodes)
+        self.idx = {n: i for i, n in enumerate(self.names)}
+        self.nets: List[np.ndarray] = []
+        self.net_of_node: Dict[int, List[int]] = {i: [] for i in range(len(self.names))}
+        for drv, sinks in by_driver.items():
+            term = np.array([self.idx[drv]] + sorted({self.idx[s] for s in sinks}))
+            ni = len(self.nets)
+            self.nets.append(term)
+            for t in set(term.tolist()):
+                self.net_of_node[t].append(ni)
+
+
+def _net_cost(pos: np.ndarray, term: np.ndarray, gamma: float, alpha: float) -> float:
+    rows = pos[term, 0]
+    cols = pos[term, 1]
+    w = int(cols.max() - cols.min())
+    h = int(rows.max() - rows.min())
+    hpwl = w + h
+    area_pass = max(0, (w + 1) * (h + 1) - len(term))
+    return float((hpwl + gamma * area_pass) ** alpha)
+
+
+def place(nl: Netlist, fabric: Fabric,
+          params: Optional[PlaceParams] = None) -> Dict[str, Tile]:
+    """Anneal a placement; returns node -> tile."""
+    p = params or PlaceParams()
+    rng = np.random.default_rng(p.seed)
+    nets = _Nets(nl)
+    n = len(nets.names)
+    cls = [TILE_CLASS[nl.nodes[name].kind] for name in nets.names]
+
+    sites: Dict[str, List[Tile]] = {
+        "pe": fabric.pe_tiles(),
+        "mem": fabric.mem_tiles(),
+        "io": fabric.io_tiles() * IO_CAPACITY,
+    }
+    for c in ("pe", "mem", "io"):
+        need = cls.count(c)
+        if need > len(sites[c]):
+            raise ValueError(
+                f"{nl.name}: needs {need} {c} sites, fabric {fabric.name} "
+                f"has {len(sites[c])}")
+
+    best_pos, best_cost = None, math.inf
+    for restart in range(max(1, p.restarts)):
+        pos = np.zeros((n, 2), dtype=np.int64)
+        site_of: Dict[int, int] = {}
+        occupant: Dict[Tuple[str, int], int] = {}
+        for c in ("pe", "mem", "io"):
+            members = [i for i in range(n) if cls[i] == c]
+            chosen = rng.choice(len(sites[c]), size=len(members), replace=False)
+            for i, si in zip(members, chosen):
+                si = int(si)
+                pos[i] = sites[c][si]
+                site_of[i] = si
+                occupant[(c, si)] = i
+
+        net_costs = np.array([_net_cost(pos, t, p.gamma, p.alpha)
+                              for t in nets.nets])
+        cost = float(net_costs.sum())
+
+        def try_move(i: int, si_new: int):
+            """Delta of moving node i to site si_new (swap if occupied)."""
+            c = cls[i]
+            j = occupant.get((c, si_new))
+            if j == i:
+                return None
+            touched = set(nets.net_of_node[i])
+            if j is not None:
+                touched |= set(nets.net_of_node[j])
+            old_pos_i = pos[i].copy()
+            pos[i] = sites[c][si_new]
+            if j is not None:
+                pos[j] = old_pos_i
+            new_costs = {ni: _net_cost(pos, nets.nets[ni], p.gamma, p.alpha)
+                         for ni in touched}
+            pos[i] = old_pos_i
+            if j is not None:
+                pos[j] = sites[c][si_new]
+            delta = sum(new_costs.values()) - float(net_costs[list(touched)].sum())
+            return delta, j, new_costs
+
+        def apply_move(i: int, si_new: int, j, new_costs):
+            c = cls[i]
+            si_old = site_of[i]
+            pos[i] = sites[c][si_new]
+            site_of[i] = si_new
+            occupant[(c, si_new)] = i
+            if j is not None:
+                pos[j] = sites[c][si_old]
+                site_of[j] = si_old
+                occupant[(c, si_old)] = j
+            else:
+                occupant.pop((c, si_old), None)
+            for ni, cc in new_costs.items():
+                net_costs[ni] = cc
+
+        # initial temperature from the spread of random-move deltas
+        deltas = []
+        for _ in range(min(200, 20 * n)):
+            i = int(rng.integers(n))
+            res = try_move(i, int(rng.integers(len(sites[cls[i]]))))
+            if res:
+                deltas.append(abs(res[0]))
+        temp = max(1e-3, float(np.std(deltas) if deltas else 1.0) * 10.0)
+        total_moves = p.moves_per_node * max(n, 16)
+        n_temps = max(1, int(math.log(5e-4) / math.log(p.t_factor)))
+        moves_per_temp = max(16, total_moves // n_temps)
+
+        for _ in range(n_temps):
+            for _ in range(moves_per_temp):
+                i = int(rng.integers(n))
+                si_new = int(rng.integers(len(sites[cls[i]])))
+                res = try_move(i, si_new)
+                if res is None:
+                    continue
+                delta, j, new_costs = res
+                if delta <= 0 or rng.random() < math.exp(-delta / temp):
+                    apply_move(i, si_new, j, new_costs)
+                    cost += delta
+            temp *= p.t_factor
+        if cost < best_cost:
+            best_cost, best_pos = cost, pos.copy()
+
+    return {nets.names[i]: (int(best_pos[i, 0]), int(best_pos[i, 1]))
+            for i in range(n)}
+
+
+def placement_stats(nl: Netlist, placement: Dict[str, Tile],
+                    gamma: float = 0.3, alpha: float = 1.0) -> dict:
+    nets = _Nets(nl)
+    pos = np.array([placement[nm] for nm in nets.names])
+    costs = [_net_cost(pos, t, gamma, alpha) for t in nets.nets]
+    hpwl = [int((pos[t, 0].max() - pos[t, 0].min()) +
+                (pos[t, 1].max() - pos[t, 1].min())) for t in nets.nets]
+    return {
+        "cost": float(np.sum(costs)),
+        "total_hpwl": int(np.sum(hpwl)),
+        "max_hpwl": int(np.max(hpwl)) if hpwl else 0,
+        "mean_hpwl": float(np.mean(hpwl)) if hpwl else 0.0,
+    }

@@ -1,0 +1,189 @@
+"""Post-place-and-route pipelining (paper Section V-D, Fig. 5).
+
+After PnR we know exactly where every tile is placed and every net routed.
+Iteratively:
+
+1. run application STA, identify the critical path;
+2. break it by enabling the switch-box pipelining register at the hop closest
+   to the midpoint of the combinational segment;
+3. re-run branch delay matching so every piece of data still arrives at every
+   functional element on the right cycle (inserting matching registers /
+   FIFOs on sibling branches);
+4. repeat until no breakable path remains, the register budget is exhausted,
+   or the critical path stops improving.
+
+Every switch box holds one pipelining register per track per direction, so a
+hop that already carries a register cannot take another — exactly the scarce-
+register constraint that motivates the paper (and that makes the software
+approach infeasible for the flush broadcast, Section VI).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .branch_delay import match_netlist
+from .netlist import RoutedDesign
+from .sta import STAReport, analyze
+from .timing_model import TimingModel
+
+
+@dataclass
+class PostPnRParams:
+    max_iters: int = 400
+    register_budget: Optional[int] = None   # max regs added by this pass
+    target_ns: float = 0.0                  # stop early if cp <= target
+    min_improvement: float = 1e-4
+    patience: int = 3
+
+
+@dataclass
+class PostPnRResult:
+    initial_ns: float
+    final_ns: float
+    iterations: int
+    registers_added: int
+    history: List[float] = field(default_factory=list)
+    stop_reason: str = ""
+
+
+def _segment_candidates(design: RoutedDesign, tm: TimingModel,
+                        rep: STAReport) -> List[Tuple[Tuple, int, float]]:
+    """Unregistered hop sites along the critical segment with their cumulative
+    delay from the segment launch: [(branch_key, hop_idx, cum_delay_ns)]."""
+    path = rep.critical_path
+    if len(path) < 2:
+        return []
+    out: List[Tuple[Tuple, int, float]] = []
+    cum = tm.reg_clk_q
+    for a, b in zip(path, path[1:]):
+        # identify the branch and hop range between consecutive path elements
+        if a[0] == "node" and b[0] == "node":
+            bkey, lo, hi = _find_branch(design, a[1], b[1]), None, None
+            if bkey is None:
+                cum += tm.core_delay(_kind(design, a[1]))
+                continue
+            rb = design.routes[bkey]
+            lo, hi = 0, len(rb.hops)
+            cum += tm.core_delay(_kind(design, a[1]))
+        elif a[0] == "node" and b[0] == "hop":
+            bkey = b[1]
+            rb = design.routes[bkey]
+            lo, hi = 0, b[2] + 1
+            cum += tm.core_delay(_kind(design, a[1]))
+        elif a[0] == "hop" and b[0] == "node":
+            bkey = a[1]
+            rb = design.routes[bkey]
+            lo, hi = a[2] + 1, len(rb.hops)
+        else:  # hop -> hop on the same branch
+            bkey = a[1]
+            rb = design.routes[bkey]
+            lo, hi = a[2] + 1, b[2] + 1
+        for i in range(lo, hi):
+            cum += tm.hop_delay(design.fabric, rb.hops[i])
+            if i not in rb.reg_hops:
+                out.append((bkey, i, cum))
+    return out
+
+
+def _kind(design: RoutedDesign, name: str) -> str:
+    node = design.netlist.nodes.get(name)
+    if node is None:
+        return "pe"
+    return "io" if node.kind in ("input", "output") else node.kind
+
+
+def _find_branch(design: RoutedDesign, driver: str, sink: str):
+    for key, rb in design.routes.items():
+        if key[0] == driver and key[1] == sink:
+            return key
+    return None
+
+
+def post_pnr_pipeline(design: RoutedDesign, tm: TimingModel,
+                      params: Optional[PostPnRParams] = None) -> PostPnRResult:
+    p = params or PostPnRParams()
+    rep = analyze(design, tm)
+    initial = rep.critical_path_ns
+    history = [initial]
+    added_total = 0
+    stall = 0
+    reason = "max_iters"
+
+    for it in range(p.max_iters):
+        if p.target_ns and rep.critical_path_ns <= p.target_ns:
+            reason = "target_reached"
+            break
+        cands = _segment_candidates(design, tm, rep)
+        if not cands:
+            reason = "core_bound"  # segment has no free register site
+            break
+        # pick the site closest to the segment's delay midpoint
+        total = rep.critical_path_ns - tm.sequential_overhead()
+        bkey, hop_idx, _ = min(cands, key=lambda c: abs(c[2] - total / 2.0))
+
+        # snapshot for revert
+        snap_regs = {k: set(rb.reg_hops) for k, rb in design.routes.items()}
+        snap_n = {b.key: b.n_regs for b in design.netlist.branches}
+
+        rb = design.routes[bkey]
+        rb.reg_hops.add(hop_idx)
+        rb.branch.n_regs += 1
+        added = 1 + match_netlist(design.netlist)
+        # materialize matching registers on routes (keep manually placed sites)
+        for rb2 in design.routes.values():
+            want = rb2.branch.n_regs
+            have = len(rb2.reg_hops)
+            if have < want:
+                _add_regs_balanced(rb2, want - have)
+
+        if p.register_budget is not None and \
+                design.netlist.added_registers() > p.register_budget:
+            _revert(design, snap_regs, snap_n)
+            reason = "register_budget"
+            break
+
+        new_rep = analyze(design, tm)
+        if new_rep.critical_path_ns >= rep.critical_path_ns - p.min_improvement:
+            stall += 1
+            if new_rep.critical_path_ns > rep.critical_path_ns:
+                _revert(design, snap_regs, snap_n)
+                new_rep = rep
+            if stall >= p.patience:
+                rep = new_rep
+                history.append(rep.critical_path_ns)
+                reason = "converged"
+                break
+        else:
+            stall = 0
+            added_total = design.netlist.added_registers()
+        rep = new_rep
+        history.append(rep.critical_path_ns)
+
+    added_total = design.netlist.added_registers()
+    return PostPnRResult(
+        initial_ns=initial, final_ns=history[-1] if history else initial,
+        iterations=len(history) - 1, registers_added=added_total,
+        history=history, stop_reason=reason)
+
+
+def _add_regs_balanced(rb, k: int):
+    """Add k registers to free hop sites, spreading across the route."""
+    free = [i for i in range(len(rb.hops)) if i not in rb.reg_hops]
+    if not free:
+        return  # zero-hop or saturated branch: register absorbed at tile input
+    step = max(1, len(free) // (k + 1))
+    for j in range(k):
+        if not free:
+            break
+        idx = free[min(len(free) - 1, (j + 1) * step)] if len(free) > 1 else free[0]
+        rb.reg_hops.add(idx)
+        free.remove(idx)
+
+
+def _revert(design: RoutedDesign, snap_regs, snap_n):
+    for k, rb in design.routes.items():
+        rb.reg_hops = set(snap_regs[k])
+    for b in design.netlist.branches:
+        b.n_regs = snap_n[b.key]

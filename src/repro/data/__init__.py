@@ -1,0 +1,3 @@
+from .pipeline import SyntheticLMData, batch_specs
+
+__all__ = ["SyntheticLMData", "batch_specs"]

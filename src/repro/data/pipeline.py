@@ -1,0 +1,98 @@
+"""Deterministic sharded synthetic data pipeline.
+
+Every batch is a pure function of (seed, step), so any host — or any restart
+of any host — regenerates exactly the same global batch: data determinism is
+what makes checkpoint/restart and elastic rescaling exact (the restored run
+consumes the same token stream it would have seen without the failure).
+
+Tokens follow a Zipf-like distribution over the vocab so softmax statistics
+are non-degenerate; labels are next-token shifts of the same stream.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        out = {"tokens": sds((b, s), jnp.int32),
+               "labels": sds((b, s), jnp.int32)}
+        if cfg.family == "vlm":
+            out["image_embeds"] = sds((b, cfg.num_image_tokens, cfg.d_model),
+                                      jnp.bfloat16)
+        if cfg.family == "audio":
+            out["frames"] = sds((b, 1500, cfg.d_model), jnp.bfloat16)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": sds((b, s), jnp.int32)}
+        if cfg.family == "vlm":
+            out["image_embeds"] = sds((b, cfg.num_image_tokens, cfg.d_model),
+                                      jnp.bfloat16)
+        if cfg.family == "audio":
+            out["frames"] = sds((b, 1500, cfg.d_model), jnp.bfloat16)
+        return out
+    # decode: one new token against a seq_len cache
+    return {"tokens": sds((b, 1), jnp.int32)}
+
+
+def batch_logical_axes(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, tuple]:
+    axes = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+    if cfg.family == "vlm":
+        axes["image_embeds"] = ("batch", None, "embed")
+    if cfg.family == "audio":
+        axes["frames"] = ("batch", None, "embed")
+    keys = batch_specs(cfg, shape).keys()
+    return {k: axes[k] for k in keys}
+
+
+@dataclasses.dataclass
+class SyntheticLMData:
+    cfg: ModelConfig
+    shape: ShapeSpec
+    seed: int = 0
+
+    def _rng(self, step: int) -> np.random.Generator:
+        return np.random.default_rng(
+            np.random.SeedSequence([self.seed, step]))
+
+    def batch(self, step: int) -> Dict[str, jax.Array]:
+        """The full global batch for `step` (host-sliced callers index it)."""
+        rng = self._rng(step)
+        b, s = self.shape.global_batch, self.shape.seq_len
+        v = self.cfg.vocab_size
+        # zipf-ish: invert a power-law CDF
+        u = rng.random((b, s + 1))
+        toks = np.minimum((v * u ** 3).astype(np.int64), v - 1).astype(np.int32)
+        out = {"tokens": jnp.asarray(toks[:, :-1]),
+               "labels": jnp.asarray(toks[:, 1:])}
+        if self.cfg.family == "vlm" and self.shape.kind != "decode":
+            out["image_embeds"] = jnp.asarray(rng.standard_normal(
+                (b, self.cfg.num_image_tokens, self.cfg.d_model),
+                dtype=np.float32).astype(jnp.bfloat16))
+        if self.cfg.family == "audio" and self.shape.kind != "decode":
+            out["frames"] = jnp.asarray(rng.standard_normal(
+                (b, 1500, self.cfg.d_model),
+                dtype=np.float32).astype(jnp.bfloat16))
+        if self.shape.kind == "decode":
+            out = {"tokens": out["tokens"][:, :1]}
+        return out
+
+    def host_batch(self, step: int, host_index: int, num_hosts: int
+                   ) -> Dict[str, jax.Array]:
+        """This host's slice of the global batch (per-host data loading)."""
+        full = self.batch(step)
+        b = self.shape.global_batch
+        per = b // num_hosts
+        lo = host_index * per
+        return jax.tree.map(lambda x: x[lo:lo + per], full)

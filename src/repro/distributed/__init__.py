@@ -1,0 +1,7 @@
+from .sharding import (BASE_RULES, FSDP_RULES, SP_RULES, named_shardings,
+                       resolve_spec, rules_with, set_rules, shard,
+                       specs_for_tree, use_rules)
+
+__all__ = ["BASE_RULES", "SP_RULES", "FSDP_RULES", "rules_with", "set_rules",
+           "use_rules", "shard", "resolve_spec", "specs_for_tree",
+           "named_shardings"]

@@ -1,0 +1,6 @@
+from .maxplus import NEG_INF, maxplus_matmul
+from .ops import longest_path
+from .ref import longest_path_ref, maxplus_matmul_ref
+
+__all__ = ["NEG_INF", "maxplus_matmul", "longest_path",
+           "longest_path_ref", "maxplus_matmul_ref"]

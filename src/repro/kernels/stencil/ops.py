@@ -1,0 +1,40 @@
+"""Public stencil ops used by the dense-app examples.
+
+``gaussian_blur`` / ``sharpen`` mirror the CGRA benchmark apps; they are the
+TPU-side golden compute for the functional-simulation checks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .ref import stencil3x3_ref
+from .stencil import stencil3x3
+
+GAUSS3 = jnp.array([[1., 2., 1.], [2., 4., 2.], [1., 2., 1.]]) / 16.0
+SHARPEN3 = jnp.array([[0., -1., 0.], [-1., 5., -1.], [0., -1., 0.]])
+SOBEL_X3 = jnp.array([[-1., 0., 1.], [-2., 0., 2.], [-1., 0., 1.]])
+SOBEL_Y3 = jnp.array([[-1., -2., -1.], [0., 0., 0.], [1., 2., 1.]])
+
+
+def gaussian_blur(x: jax.Array, *, use_kernel: bool = True) -> jax.Array:
+    f = stencil3x3 if use_kernel else stencil3x3_ref
+    return f(x, GAUSS3.astype(x.dtype))
+
+
+def sharpen(x: jax.Array, *, use_kernel: bool = True) -> jax.Array:
+    f = stencil3x3 if use_kernel else stencil3x3_ref
+    return f(x, SHARPEN3.astype(x.dtype))
+
+
+def sobel_mag2(x: jax.Array, *, use_kernel: bool = True) -> jax.Array:
+    """Squared gradient magnitude (Harris corner ingredient)."""
+    f = stencil3x3 if use_kernel else stencil3x3_ref
+    gx = f(x, SOBEL_X3.astype(x.dtype))
+    gy = f(x, SOBEL_Y3.astype(x.dtype))
+    return gx * gx + gy * gy
+
+
+__all__ = ["stencil3x3", "stencil3x3_ref", "gaussian_blur", "sharpen",
+           "sobel_mag2", "GAUSS3", "SHARPEN3", "SOBEL_X3", "SOBEL_Y3"]

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the 3x3 stencil kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def stencil3x3_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Same-padded 3x3 correlation (zero boundary)."""
+    xp = jnp.pad(x, 1)
+    h, width = x.shape
+    acc = jnp.zeros_like(x)
+    for dy in range(3):
+        for dx in range(3):
+            acc = acc + w[dy, dx].astype(x.dtype) * \
+                jax.lax.dynamic_slice(xp, (dy, dx), (h, width))
+    return acc

@@ -1,0 +1,43 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module touches no jax device state — the dry-run launcher
+sets XLA_FLAGS for 512 host devices *before* any jax initialization, and
+smoke tests import the same module under the default single device.
+
+Mesh shapes:
+  single-pod : (16, 16)    axes ("data", "model")   — 256 chips (one v5e pod)
+  multi-pod  : (2, 16, 16) axes ("pod", "data", "model") — 512 chips
+
+The "model" axis carries tensor/expert parallelism (intra-pod, ICI-local by
+construction); "data"/"pod" carry data parallelism (gradient all-reduces
+cross pods over DCI — exactly the traffic the gradient-compression lever
+targets).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh():
+    """1-device mesh with the production axis names (CPU tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_mesh_for(devices: Optional[int] = None, model_parallel: int = 16):
+    """Elastic variant: build a (data, model) mesh over `devices` chips
+    (defaults to whatever is visible) — used by the elastic-rescale path."""
+    n = devices or len(jax.devices())
+    mp = min(model_parallel, n)
+    while n % mp:
+        mp -= 1
+    return jax.make_mesh((n // mp, mp), ("data", "model"))

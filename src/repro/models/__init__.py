@@ -1,0 +1,6 @@
+from .model import LM
+from .params import (ParamDef, init_params, param_count, param_logical_axes,
+                     param_shapes)
+
+__all__ = ["LM", "ParamDef", "init_params", "param_shapes",
+           "param_logical_axes", "param_count"]

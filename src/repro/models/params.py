@@ -1,0 +1,87 @@
+"""Parameter-definition infrastructure.
+
+Models declare their weights as a nested tree of ``ParamDef`` leaves — shape,
+dtype, *logical* sharding axes, and an initializer.  From one definition tree
+we derive everything the framework needs without duplication:
+
+* ``init_params``        — materialized arrays (CPU smoke tests, examples)
+* ``param_shapes``       — ShapeDtypeStructs (dry-run lowering, no allocation)
+* ``param_logical_axes`` — logical-axis tuples (resolved to PartitionSpec by
+                           ``repro.distributed.sharding``)
+
+Per-layer weights are declared once and stacked along a leading "layers"
+axis so the model can ``jax.lax.scan`` over depth — keeping HLO size (and
+container compile time) independent of 88-layer configs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Tree = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]          # logical axis names
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"                      # normal | zeros | ones | const
+    scale: float = 1.0                        # stddev multiplier / const value
+    fan_in: Optional[int] = None              # None -> last-but-one dim
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"axes {self.axes} do not match shape {self.shape}")
+
+
+def _init_leaf(rng: jax.Array, d: ParamDef) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init == "const":
+        return jnp.full(d.shape, d.scale, d.dtype)
+    fan = d.fan_in
+    if fan is None:
+        fan = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+    std = d.scale / (fan ** 0.5)
+    return (jax.random.normal(rng, d.shape, jnp.float32) * std).astype(d.dtype)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_map_defs(fn: Callable[[ParamDef], Any], tree: Tree) -> Tree:
+    return jax.tree.map(fn, tree, is_leaf=is_def)
+
+
+def init_params(rng: jax.Array, defs: Tree) -> Tree:
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(rng, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [_init_leaf(k, d) for k, d in zip(keys, leaves)])
+
+
+def param_shapes(defs: Tree) -> Tree:
+    return tree_map_defs(lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs)
+
+
+def param_logical_axes(defs: Tree) -> Tree:
+    return tree_map_defs(lambda d: d.axes, defs)
+
+
+def param_count(defs: Tree) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=is_def)
+    total = 0
+    for d in leaves:
+        n = 1
+        for s in d.shape:
+            n *= s
+        total += n
+    return total

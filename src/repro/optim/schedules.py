@@ -1,0 +1,43 @@
+"""LR schedules: cosine (llama-style) and WSD (minicpm's warmup-stable-decay)."""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(peak: float, total_steps: int,
+                    warmup_frac: float = 0.01,
+                    final_frac: float = 0.1) -> Callable:
+    warmup = max(1, int(total_steps * warmup_frac))
+
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / warmup
+        prog = jnp.clip((step - warmup) / max(1, total_steps - warmup), 0, 1)
+        cos = final_frac * peak + (1 - final_frac) * peak * \
+            0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+
+    return sched
+
+
+def wsd_schedule(peak: float, total_steps: int, warmup_frac: float = 0.01,
+                 decay_frac: float = 0.1, final_frac: float = 0.01) -> Callable:
+    """Warmup-Stable-Decay (MiniCPM): linear warmup, long flat plateau,
+    short exponential-ish (here linear-in-log) decay tail."""
+    warmup = max(1, int(total_steps * warmup_frac))
+    decay_start = int(total_steps * (1 - decay_frac))
+
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / warmup
+        tail_prog = jnp.clip((step - decay_start) /
+                             max(1, total_steps - decay_start), 0, 1)
+        tail = peak * jnp.exp(jnp.log(final_frac) * tail_prog)
+        out = jnp.where(step < warmup, warm,
+                        jnp.where(step < decay_start, peak, tail))
+        return out
+
+    return sched

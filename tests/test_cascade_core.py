@@ -1,0 +1,265 @@
+"""Cascade core: property tests (hypothesis) + compiler integration tests.
+
+The central invariant of the paper (Sections III-B, V): every pipelining
+transformation must preserve the application's output streams exactly,
+modulo added pipeline latency — enforced by branch delay matching, checked
+here with the cycle-accurate functional simulator on random DAGs.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.apps import ALL_APPS, DENSE_APPS, SPARSE_APPS
+from repro.core.branch_delay import (arrival_cycles_dfg, check_matched_dfg,
+                                     match_dfg)
+from repro.core.broadcast import broadcast_pipelining
+from repro.core.compiler import CascadeCompiler, PassConfig
+from repro.core.dfg import DFG, INPUT, MEM, OUTPUT, PE, REG, RF
+from repro.core.pipelining import compute_pipelining
+from repro.core.sim import equivalent, simulate, simulate_sparse
+from repro.core.sta import analyze, sdf_simulate_fmax
+
+
+# ---------------------------------------------------------------------------
+# random-DAG strategy
+
+
+BINOPS = ["add", "sub", "mul", "and", "or", "xor", "min", "max"]
+
+
+@st.composite
+def random_dfg(draw):
+    g = DFG("prop")
+    n_in = draw(st.integers(1, 3))
+    srcs = []
+    for i in range(n_in):
+        srcs.append(g.add(INPUT, name=f"in{i}"))
+    n_ops = draw(st.integers(1, 14))
+    for i in range(n_ops):
+        kind = draw(st.sampled_from(["pe"] * 6 + ["delay", "rf"]))
+        if kind == "pe":
+            op = draw(st.sampled_from(BINOPS))
+            a = draw(st.sampled_from(srcs))
+            b = draw(st.sampled_from(srcs))
+            n = g.add(PE, op=op)
+            g.connect(a, n, port=0)
+            g.connect(b, n, port=1)
+        elif kind == "delay":
+            a = draw(st.sampled_from(srcs))
+            n = g.add(MEM, op="delay", depth=draw(st.integers(1, 3)),
+                      latency=1)
+            g.connect(a, n)
+        else:
+            a = draw(st.sampled_from(srcs))
+            n = g.add(RF, depth=draw(st.integers(1, 2)))
+            g.connect(a, n)
+        srcs.append(n)
+    # every sink-less node feeds an output (keeps all paths observable)
+    sinks = [n for n in g.nodes if not g.succs(n) and
+             g.nodes[n].kind != OUTPUT]
+    for i, s in enumerate(sinks):
+        o = g.add(OUTPUT, name=f"out{i}")
+        g.connect(s, o)
+    return g.validate()
+
+
+def _inputs_for(g, seed=0, n=48):
+    rng = np.random.default_rng(seed)
+    return {name: rng.integers(0, 255, size=n).tolist()
+            for name, nd in g.nodes.items() if nd.kind == INPUT}
+
+
+# ---------------------------------------------------------------------------
+# properties
+
+
+@settings(max_examples=40, deadline=None)
+@given(random_dfg(), st.integers(0, 3))
+def test_compute_pipelining_preserves_function(g, seed):
+    ref = g.copy()
+    compute_pipelining(g, rf_threshold=3)
+    assert check_matched_dfg(g)
+    assert equivalent(ref, g, _inputs_for(ref, seed), n=32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(random_dfg(), st.integers(2, 5))
+def test_broadcast_pipelining_preserves_function(g, fanout):
+    ref = g.copy()
+    compute_pipelining(g, rf_threshold=3)
+    broadcast_pipelining(g, fanout_threshold=fanout, arity=2)
+    assert check_matched_dfg(g)
+    assert equivalent(ref, g, _inputs_for(ref, 1), n=32)
+
+
+@settings(max_examples=30, deadline=None)
+@given(random_dfg())
+def test_match_dfg_equalizes_arrivals(g):
+    """After matching, every node's data inputs agree on arrival cycles."""
+    compute_pipelining(g, rf_threshold=2)
+    arr = arrival_cycles_dfg(g)
+    from repro.core.dfg import CONTROL_PORT
+    for name in g.nodes:
+        ins = [e for e in g.in_edges(name) if e.port < CONTROL_PORT]
+        times = {arr[e.src] for e in ins}
+        assert len(times) <= 1, (name, times)
+
+
+@settings(max_examples=20, deadline=None)
+@given(random_dfg(), st.integers(0, 2))
+def test_inserted_regs_only_shift_latency(g, seed):
+    """Manually breaking edges with registers + rematching is functional."""
+    ref = g.copy()
+    rng = np.random.default_rng(seed)
+    edges = [e for e in list(g.edges)
+             if g.nodes[e.src].kind != "const"][:]
+    for e in edges:
+        if rng.random() < 0.3:
+            g.split_edge(e, REG)
+    match_dfg(g)
+    assert check_matched_dfg(g)
+    assert equivalent(ref, g, _inputs_for(ref, seed), n=32)
+
+
+# ---------------------------------------------------------------------------
+# compiler integration (the paper's flow end to end)
+
+
+@pytest.fixture(scope="module")
+def compiler():
+    return CascadeCompiler()
+
+
+@pytest.mark.parametrize("app", sorted(DENSE_APPS))
+def test_dense_flow_verified(compiler, app):
+    """Full Cascade flow preserves functionality (paper's correctness bar)."""
+    r = compiler.compile(ALL_APPS[app], PassConfig.full(place_moves=40),
+                         verify=True)
+    assert r.pass_stats.get("verified") is True
+    assert r.sta.critical_path_ns > 0
+
+
+@pytest.mark.parametrize("app", sorted(DENSE_APPS))
+def test_pipelining_improves_critical_path(compiler, app):
+    """Cascade's headline claim, dense: pipelined CP << unpipelined CP."""
+    r0 = compiler.compile(ALL_APPS[app], PassConfig.unpipelined(place_moves=40))
+    r1 = compiler.compile(ALL_APPS[app], PassConfig.full(place_moves=40))
+    ratio = r0.sta.critical_path_ns / r1.sta.critical_path_ns
+    assert ratio > 3.0, f"{app}: CP ratio {ratio:.2f}"
+    assert r1.power.edp_js < r0.power.edp_js
+
+
+@pytest.mark.parametrize("app", sorted(SPARSE_APPS))
+def test_sparse_flow(compiler, app):
+    """Sparse flow: FIFO pipelining compiles and improves CP (2-4.4x band)."""
+    spec = ALL_APPS[app]
+    r0 = compiler.compile(spec, PassConfig.unpipelined(place_moves=40))
+    r1 = compiler.compile(spec, PassConfig.full(place_moves=40))
+    ratio = r0.sta.critical_path_ns / r1.sta.critical_path_ns
+    assert ratio > 1.3, f"{app}: sparse CP ratio {ratio:.2f}"
+
+
+def test_sparse_fifo_insertion_no_deadlock():
+    """FIFO-pipelined sparse graphs must not deadlock and must preserve the
+    token streams."""
+    spec = ALL_APPS["vecadd"]
+    g = spec.build(1)
+    rng = np.random.default_rng(0)
+    ins = {n: rng.integers(0, 99, size=24).tolist()
+           for n, nd in g.nodes.items() if nd.kind == INPUT}
+    base = simulate_sparse(g.copy(), ins)
+    # deepen every FIFO (what sparse pipelining does) and re-check streams
+    g2 = g.copy()
+    for n in g2.nodes.values():
+        if n.kind == "fifo":
+            n.depth += 2
+    assert simulate_sparse(g2, ins) == base
+
+
+def test_post_pnr_monotone(compiler):
+    r = compiler.compile(ALL_APPS["harris"], PassConfig.full(place_moves=40))
+    assert r.post_pnr is not None
+    assert r.post_pnr.final_ns <= r.post_pnr.initial_ns
+
+
+def test_sta_vs_sdf_simulation(compiler):
+    """STA is a (pessimistic) upper bound on the SDF-sim critical path, and
+    within the paper's error band at high frequency (~13% @ >500 MHz)."""
+    r = compiler.compile(ALL_APPS["unsharp"], PassConfig.full(place_moves=40))
+    sta_mhz = r.sta.max_freq_mhz
+    sdf_mhz = sdf_simulate_fmax(r.design, compiler.timing, seed=0)
+    assert sdf_mhz >= sta_mhz * 0.99          # model is a lower bound on fmax
+    assert sdf_mhz <= sta_mhz * 1.9           # and not wildly pessimistic
+
+
+def test_placement_alpha_reduces_long_routes(compiler):
+    """Eq. 1's criticality exponent: higher alpha -> shorter critical path
+    (on average, fixed seed here)."""
+    from repro.core.netlist import extract_netlist
+    from repro.core.place import PlaceParams, place
+    from repro.core.route import route
+    from repro.core.sta import analyze
+
+    g = ALL_APPS["harris"].build(2)
+    compute_pipelining(g, 4)
+    nl = extract_netlist(g)
+    cps = {1.0: [], 1.6: []}
+    for alpha in cps:
+        for seed in (1, 2, 3):
+            pp = PlaceParams(alpha=alpha, gamma=0.3, seed=seed,
+                             moves_per_node=80)
+            design = route(nl, place(nl, compiler.fabric, pp),
+                           compiler.fabric)
+            cps[alpha].append(analyze(design, compiler.timing)
+                              .critical_path_ns)
+    # SA is stochastic: require alpha=1.6 no worse on average (it is the
+    # incremental win in Fig. 7/10; the big dense wins come from the other
+    # passes)
+    assert np.mean(cps[1.6]) <= np.mean(cps[1.0]) * 1.10
+
+
+def test_low_unroll_duplication_stamps_identical_copies(compiler):
+    r = compiler.compile(ALL_APPS["gaussian"], PassConfig.full(place_moves=40))
+    assert r.design.unroll_copies > 1
+
+
+@settings(max_examples=8, deadline=None)
+@given(random_dfg(), st.integers(0, 2))
+def test_full_compiler_flow_preserves_function_on_random_apps(g, seed):
+    """The strongest invariant: ANY random app through the ENTIRE flow
+    (compute+broadcast pipelining, placement, routing, post-PnR register
+    insertion, branch matching) is cycle-exact against its source graph."""
+    from repro.core.apps import AppSpec
+    from repro.core.dfg import INPUT
+
+    n_inputs = sum(1 for n in g.nodes.values() if n.kind == INPUT)
+    if n_inputs > 10 or len(g.nodes) > 40:
+        return                               # respect the 64-IO fabric
+    built = {}
+
+    def builder(copy, gg, width):
+        # stamp the pre-built random graph into the compiler's fresh DFG
+        mapping = {}
+        for name, node in g.nodes.items():
+            mapping[name] = gg.add(node.kind, op=node.op, width=node.width,
+                                   latency=node.latency, depth=node.depth,
+                                   value=node.value)
+        for e in g.edges:
+            gg.connect(mapping[e.src], mapping[e.dst], port=e.port,
+                       width=e.width)
+
+    spec = AppSpec("prop_app", builder, frame=(16, 16), unroll=1)
+    c = CascadeCompiler()
+    r = c.compile(spec, PassConfig.full(place_moves=30,
+                                        low_unroll_dup=False), verify=True)
+    assert r.pass_stats.get("verified") is True
+
+
+def test_flush_hardening_reduces_critical_path(compiler):
+    """Section VI: soft-routed flush broadcast vs hardened flush."""
+    cfg_soft = PassConfig.full(place_moves=40, harden_flush=False)
+    cfg_hard = PassConfig.full(place_moves=40, harden_flush=True)
+    r_soft = compiler.compile(ALL_APPS["unsharp"], cfg_soft)
+    r_hard = compiler.compile(ALL_APPS["unsharp"], cfg_hard)
+    assert r_hard.sta.critical_path_ns <= r_soft.sta.critical_path_ns

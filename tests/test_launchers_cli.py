@@ -1,0 +1,46 @@
+"""Subprocess smokes of the CLI launchers — the exact commands README
+documents must work end to end (fresh interpreter, fresh jax init)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+ENV = {**os.environ, "PYTHONPATH": "src"}
+
+
+def _run(args, timeout=600):
+    return subprocess.run([sys.executable] + args, env=ENV, cwd=".",
+                          capture_output=True, text=True, timeout=timeout)
+
+
+def test_train_cli_smoke(tmp_path):
+    r = _run(["-m", "repro.launch.train", "--arch", "llama3-8b", "--smoke",
+              "--steps", "8", "--ckpt-dir", str(tmp_path / "ck"),
+              "--ckpt-every", "4", "--fail-at", "6"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "restored@4" in r.stdout or "restored@" in r.stdout
+    assert "loss" in r.stdout
+
+
+def test_serve_cli_smoke():
+    r = _run(["-m", "repro.launch.serve", "--arch", "rwkv6-7b", "--smoke",
+              "--batch", "2", "--prompt-len", "8", "--gen", "4"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "tok/s" in r.stdout
+
+
+def test_dryrun_cli_single_cell(tmp_path):
+    r = _run(["-m", "repro.launch.dryrun", "--arch", "whisper-small",
+              "--shape", "decode_32k", "--out", str(tmp_path)],
+             timeout=900)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "whisper-small x decode_32k" in r.stdout
+    assert (tmp_path / "whisper-small_decode_32k_16x16.json").exists()
+
+
+def test_quickstart_example():
+    r = _run(["examples/quickstart.py"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "critical path ratio" in r.stdout
