@@ -1,0 +1,16 @@
+"""Shared helpers for the benchmark table modules."""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+
+def print_csv(rows: List[Dict], name: str):
+    """CSV-block printer used by every benchmark table module."""
+    if not rows:
+        return
+    cols = list(rows[0])
+    print(f"\n== {name} ==")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r[c]) for c in cols))

@@ -4,56 +4,70 @@ quality/resource trade-off.
 * placement alpha (Eq. 1 criticality exponent) sweep — Section V-C
 * post-PnR register budget sweep — Section V-D ("number of registers added
   vs critical path" trade-off the paper describes for broadcast/post-PnR)
+
+Both sweeps batch-compile their whole config grid concurrently through
+``compile_batch`` (the points are independent).
 """
 
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Optional, Sequence
 
+from benchmarks._util import print_csv
 from repro.core.apps import ALL_APPS
 from repro.core.compiler import CascadeCompiler, PassConfig
 
 MOVES = 100
+FAST_MOVES = 40
+
+ALPHAS = (1.0, 1.3, 1.6, 2.0, 2.5)
+FAST_ALPHAS = (1.0, 1.6, 2.5)
+BUDGETS = (0, 8, 32, 128, 512)
+FAST_BUDGETS = (0, 32, 512)
 
 
-def alpha_sweep(app: str = "harris") -> List[Dict]:
-    c = CascadeCompiler()
+def alpha_sweep(app: str = "harris", compiler: Optional[CascadeCompiler] = None,
+                moves: int = MOVES,
+                alphas: Sequence[float] = ALPHAS) -> List[Dict]:
+    c = compiler or CascadeCompiler()
+    jobs = [(ALL_APPS[app], PassConfig.full(place_moves=moves,
+                                            placement_alpha=alpha, seed=1))
+            for alpha in alphas]
     rows = []
-    for alpha in (1.0, 1.3, 1.6, 2.0, 2.5):
-        cfg = PassConfig.full(place_moves=MOVES, placement_alpha=alpha,
-                              seed=1)
-        r = c.compile(ALL_APPS[app], cfg)
+    for alpha, r in zip(alphas, c.compile_batch(jobs)):
         rows.append({"app": app, "alpha": alpha,
                      "critical_path_ns": round(r.sta.critical_path_ns, 3),
                      "freq_mhz": round(r.sta.max_freq_mhz, 1),
                      "registers": r.design.physical_register_count()})
-    print("\n== ablation: placement alpha (Eq. 1) ==")
-    cols = list(rows[0])
-    print(",".join(cols))
-    for r in rows:
-        print(",".join(str(r[k]) for k in cols))
+    print_csv(rows, "ablation: placement alpha (Eq. 1)")
     return rows
 
 
-def budget_sweep(app: str = "unsharp") -> List[Dict]:
-    c = CascadeCompiler()
+def budget_sweep(app: str = "unsharp",
+                 compiler: Optional[CascadeCompiler] = None,
+                 moves: int = MOVES,
+                 budgets: Sequence[int] = BUDGETS) -> List[Dict]:
+    c = compiler or CascadeCompiler()
+    jobs = [(ALL_APPS[app], PassConfig.full(place_moves=moves,
+                                            post_pnr_budget=budget, seed=1))
+            for budget in budgets]
     rows = []
-    for budget in (0, 8, 32, 128, 512):
-        cfg = PassConfig.full(place_moves=MOVES, post_pnr_budget=budget,
-                              seed=1)
-        r = c.compile(ALL_APPS[app], cfg)
+    for budget, r in zip(budgets, c.compile_batch(jobs)):
         rows.append({"app": app, "register_budget": budget,
                      "critical_path_ns": round(r.sta.critical_path_ns, 3),
                      "freq_mhz": round(r.sta.max_freq_mhz, 1),
                      "regs_added": (r.post_pnr.registers_added
                                     if r.post_pnr else 0)})
-    print("\n== ablation: post-PnR register budget ==")
-    cols = list(rows[0])
-    print(",".join(cols))
-    for r in rows:
-        print(",".join(str(r[k]) for k in cols))
+    print_csv(rows, "ablation: post-PnR register budget")
     return rows
 
 
-def run_all() -> Dict[str, List[Dict]]:
-    return {"alpha": alpha_sweep(), "budget": budget_sweep()}
+def run_all(fast: bool = False) -> Dict[str, List[Dict]]:
+    c = CascadeCompiler()
+    moves = FAST_MOVES if fast else MOVES
+    return {
+        "alpha": alpha_sweep(compiler=c, moves=moves,
+                             alphas=FAST_ALPHAS if fast else ALPHAS),
+        "budget": budget_sweep(compiler=c, moves=moves,
+                               budgets=FAST_BUDGETS if fast else BUDGETS),
+    }

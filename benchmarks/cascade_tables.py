@@ -9,6 +9,12 @@ Table II sparse frequency / runtime / power (+ Fig. 11 EDP)
 
 Each returns a list of row-dicts and prints a CSV block; ``benchmarks.run``
 drives them all and checks the paper's headline bands.
+
+All tables compile through ``CascadeCompiler.compile_batch`` sharing one
+content-hash compile cache, so the many (app, config) pairs the tables have
+in common (e.g. the full/unpipelined pairs of Fig. 6 and Table I) compile
+exactly once per invocation — and not at all on repeat invocations within
+one process.
 """
 
 from __future__ import annotations
@@ -18,94 +24,98 @@ from typing import Dict, List
 
 import numpy as np
 
+from benchmarks._util import print_csv
 from repro.core.apps import ALL_APPS, DENSE_APPS, SPARSE_APPS
 from repro.core.compiler import CascadeCompiler, PassConfig
 from repro.core.sta import sdf_simulate_fmax
 
 MOVES = 120          # SA moves/node: enough for stable results, CPU-friendly
-
-
-def _print(rows: List[Dict], name: str):
-    if not rows:
-        return
-    cols = list(rows[0])
-    print(f"\n== {name} ==")
-    print(",".join(cols))
-    for r in rows:
-        print(",".join(str(r[c]) for c in cols))
+FAST_MOVES = 40      # --fast: quick smoke-level tables
 
 
 # ---------------------------------------------------------------------------
 
 
-def sta_accuracy(compiler: CascadeCompiler) -> List[Dict]:
+def sta_accuracy(compiler: CascadeCompiler, moves: int = MOVES) -> List[Dict]:
     """Fig. 6: STA-modeled clock period vs SDF-sim period per app/config."""
+    apps = list(DENSE_APPS) + list(SPARSE_APPS)
+    configs = (PassConfig.unpipelined(place_moves=moves),
+               PassConfig.full(place_moves=moves))
+    jobs = [(ALL_APPS[a], cfg) for a in apps for cfg in configs]
+    results = compiler.compile_batch(jobs)
     rows = []
     errs_fast = []
-    for app in list(DENSE_APPS) + list(SPARSE_APPS):
-        for cfg in (PassConfig.unpipelined(place_moves=MOVES),
-                    PassConfig.full(place_moves=MOVES)):
-            r = compiler.compile(ALL_APPS[app], cfg)
-            sta_mhz = r.sta.max_freq_mhz
-            sdf_mhz = sdf_simulate_fmax(r.design, compiler.timing, seed=1)
-            err = abs(sdf_mhz - sta_mhz) / sdf_mhz
-            if sdf_mhz > 500:
-                errs_fast.append(err)
-            rows.append({"app": app,
-                         "pipelined": int(cfg.compute_pipelining),
-                         "sta_mhz": round(sta_mhz, 1),
-                         "sdf_mhz": round(sdf_mhz, 1),
-                         "err_pct": round(100 * err, 1)})
+    for (app, cfg), r in zip(((a, c) for a in apps for c in configs), results):
+        sta_mhz = r.sta.max_freq_mhz
+        sdf_mhz = sdf_simulate_fmax(r.design, compiler.timing, seed=1)
+        err = abs(sdf_mhz - sta_mhz) / sdf_mhz
+        if sdf_mhz > 500:
+            errs_fast.append(err)
+        rows.append({"app": app,
+                     "pipelined": int(cfg.compute_pipelining),
+                     "sta_mhz": round(sta_mhz, 1),
+                     "sdf_mhz": round(sdf_mhz, 1),
+                     "err_pct": round(100 * err, 1)})
     mean_fast = 100 * float(np.mean(errs_fast)) if errs_fast else 0.0
     rows.append({"app": "MEAN>500MHz", "pipelined": "",
                  "sta_mhz": "", "sdf_mhz": "",
                  "err_pct": round(mean_fast, 1)})
-    _print(rows, "Fig6_sta_accuracy (paper: ~13% mean err above 500 MHz)")
+    print_csv(rows, "Fig6_sta_accuracy (paper: ~13% mean err above 500 MHz)")
     return rows
 
 
-def dense_incremental(compiler: CascadeCompiler) -> List[Dict]:
-    """Fig. 7: technique-by-technique runtime on the dense apps."""
-    stages = [
-        ("unpipelined", PassConfig.unpipelined()),
+def _dense_stages(moves: int):
+    return [
+        ("unpipelined", PassConfig.unpipelined(place_moves=moves)),
         ("+compute", PassConfig(compute_pipelining=True,
                                 broadcast_pipelining=False,
                                 placement_alpha=1.0, post_pnr=False,
-                                low_unroll_dup=False, harden_flush=True)),
+                                low_unroll_dup=False, harden_flush=True,
+                                place_moves=moves)),
         ("+broadcast", PassConfig(broadcast_pipelining=True,
                                   placement_alpha=1.0, post_pnr=False,
-                                  low_unroll_dup=False, harden_flush=True)),
+                                  low_unroll_dup=False, harden_flush=True,
+                                  place_moves=moves)),
         ("+placement", PassConfig(broadcast_pipelining=True, post_pnr=False,
-                                  low_unroll_dup=False, harden_flush=True)),
+                                  low_unroll_dup=False, harden_flush=True,
+                                  place_moves=moves)),
         ("+post_pnr", PassConfig(broadcast_pipelining=True,
-                                 low_unroll_dup=False, harden_flush=True)),
-        ("+low_unroll", PassConfig.full()),
+                                 low_unroll_dup=False, harden_flush=True,
+                                 place_moves=moves)),
+        ("+low_unroll", PassConfig.full(place_moves=moves)),
     ]
+
+
+def dense_incremental(compiler: CascadeCompiler,
+                      moves: int = MOVES) -> List[Dict]:
+    """Fig. 7: technique-by-technique runtime on the dense apps."""
+    stages = _dense_stages(moves)
+    pairs = [(app, name, cfg) for app in DENSE_APPS for name, cfg in stages]
+    results = compiler.compile_batch([(ALL_APPS[a], cfg)
+                                      for a, _, cfg in pairs])
     rows = []
-    for app in DENSE_APPS:
-        base_ms = None
-        for name, cfg in stages:
-            cfg.place_moves = MOVES
-            r = compiler.compile(ALL_APPS[app], cfg)
-            ms = r.power.runtime_s * 1e3
-            if base_ms is None:
-                base_ms = ms
-            rows.append({"app": app, "stage": name,
-                         "freq_mhz": round(r.sta.max_freq_mhz, 1),
-                         "runtime_ms": round(ms, 3),
-                         "runtime_vs_base": round(ms / base_ms, 4)})
-    _print(rows, "Fig7_dense_incremental")
+    base_ms: Dict[str, float] = {}
+    for (app, name, _), r in zip(pairs, results):
+        ms = r.power.runtime_s * 1e3
+        base_ms.setdefault(app, ms)
+        rows.append({"app": app, "stage": name,
+                     "freq_mhz": round(r.sta.max_freq_mhz, 1),
+                     "runtime_ms": round(ms, 3),
+                     "runtime_vs_base": round(ms / base_ms[app], 4)})
+    print_csv(rows, "Fig7_dense_incremental")
     return rows
 
 
-def dense_table(compiler: CascadeCompiler) -> List[Dict]:
+def dense_table(compiler: CascadeCompiler, moves: int = MOVES) -> List[Dict]:
     """Table I + Fig. 8: unpipelined vs fully pipelined dense apps."""
+    apps = list(DENSE_APPS)
+    jobs = [(ALL_APPS[a], cfg) for a in apps
+            for cfg in (PassConfig.unpipelined(place_moves=moves),
+                        PassConfig.full(place_moves=moves))]
+    results = compiler.compile_batch(jobs)
     rows = []
-    for app in DENSE_APPS:
-        r0 = compiler.compile(ALL_APPS[app],
-                              PassConfig.unpipelined(place_moves=MOVES))
-        r1 = compiler.compile(ALL_APPS[app],
-                              PassConfig.full(place_moves=MOVES))
+    for i, app in enumerate(apps):
+        r0, r1 = results[2 * i], results[2 * i + 1]
         cp_ratio = r0.sta.critical_path_ns / r1.sta.critical_path_ns
         edp_ratio = r0.power.edp_js / r1.power.edp_js
         rt_drop = 100 * (1 - r1.power.runtime_s / r0.power.runtime_s)
@@ -121,67 +131,72 @@ def dense_table(compiler: CascadeCompiler) -> List[Dict]:
             "edp_ratio": round(edp_ratio, 1),
             "runtime_drop_pct": round(rt_drop, 1),
         })
-    _print(rows, "TableI_Fig8_dense (paper: CP 7-34x, EDP 7-190x, "
+    print_csv(rows, "TableI_Fig8_dense (paper: CP 7-34x, EDP 7-190x, "
                  "runtime -84..-97%)")
     return rows
 
 
-def flush_hardening(compiler: CascadeCompiler) -> List[Dict]:
+def flush_hardening(compiler: CascadeCompiler,
+                    moves: int = MOVES) -> List[Dict]:
     """Fig. 9: software-routed vs hardened flush broadcast."""
+    apps = list(DENSE_APPS)
+    jobs = [(ALL_APPS[a], PassConfig.full(place_moves=moves,
+                                          harden_flush=hard))
+            for a in apps for hard in (False, True)]
+    results = compiler.compile_batch(jobs)
     rows = []
-    for app in DENSE_APPS:
-        soft = compiler.compile(ALL_APPS[app], PassConfig.full(
-            place_moves=MOVES, harden_flush=False))
-        hard = compiler.compile(ALL_APPS[app], PassConfig.full(
-            place_moves=MOVES, harden_flush=True))
+    for i, app in enumerate(apps):
+        soft, hard = results[2 * i], results[2 * i + 1]
         drop = 100 * (1 - hard.power.runtime_s / soft.power.runtime_s)
         rows.append({"app": app,
                      "soft_mhz": round(soft.sta.max_freq_mhz, 1),
                      "hard_mhz": round(hard.sta.max_freq_mhz, 1),
                      "runtime_drop_pct": round(drop, 1)})
-    _print(rows, "Fig9_flush_hardening (paper: runtime -31..-56%)")
+    print_csv(rows, "Fig9_flush_hardening (paper: runtime -31..-56%)")
     return rows
 
 
-def sparse_incremental(compiler: CascadeCompiler) -> List[Dict]:
+def sparse_incremental(compiler: CascadeCompiler,
+                       moves: int = MOVES) -> List[Dict]:
     """Fig. 10: sparse apps — compute pipelining is always on; placement
     optimization and post-PnR pipelining are applied incrementally."""
     stages = [
         ("compute_only", PassConfig(broadcast_pipelining=False,
                                     placement_alpha=1.0, post_pnr=False,
-                                    low_unroll_dup=False)),
+                                    low_unroll_dup=False, place_moves=moves)),
         ("+placement", PassConfig(broadcast_pipelining=False, post_pnr=False,
-                                  low_unroll_dup=False)),
+                                  low_unroll_dup=False, place_moves=moves)),
         ("+post_pnr", PassConfig(broadcast_pipelining=False,
-                                 low_unroll_dup=False)),
+                                 low_unroll_dup=False, place_moves=moves)),
     ]
+    pairs = [(app, name, cfg) for app in SPARSE_APPS for name, cfg in stages]
+    results = compiler.compile_batch([(ALL_APPS[a], cfg)
+                                      for a, _, cfg in pairs])
     rows = []
-    for app in SPARSE_APPS:
-        base_us = None
-        for name, cfg in stages:
-            cfg.place_moves = MOVES
-            r = compiler.compile(ALL_APPS[app], cfg)
-            us = r.power.runtime_s * 1e6
-            if base_us is None:
-                base_us = us
-            rows.append({"app": app, "stage": name,
-                         "freq_mhz": round(r.sta.max_freq_mhz, 1),
-                         "runtime_us": round(us, 3),
-                         "runtime_vs_base": round(us / base_us, 4)})
-    _print(rows, "Fig10_sparse_incremental")
+    base_us: Dict[str, float] = {}
+    for (app, name, _), r in zip(pairs, results):
+        us = r.power.runtime_s * 1e6
+        base_us.setdefault(app, us)
+        rows.append({"app": app, "stage": name,
+                     "freq_mhz": round(r.sta.max_freq_mhz, 1),
+                     "runtime_us": round(us, 3),
+                     "runtime_vs_base": round(us / base_us[app], 4)})
+    print_csv(rows, "Fig10_sparse_incremental")
     return rows
 
 
-def sparse_table(compiler: CascadeCompiler) -> List[Dict]:
+def sparse_table(compiler: CascadeCompiler, moves: int = MOVES) -> List[Dict]:
     """Table II + Fig. 11: compute-pipelined vs fully pipelined sparse."""
     compute_only = PassConfig(broadcast_pipelining=False,
                               placement_alpha=1.0, post_pnr=False,
-                              low_unroll_dup=False, place_moves=MOVES)
+                              low_unroll_dup=False, place_moves=moves)
+    apps = list(SPARSE_APPS)
+    jobs = [(ALL_APPS[a], cfg) for a in apps
+            for cfg in (compute_only, PassConfig.full(place_moves=moves))]
+    results = compiler.compile_batch(jobs)
     rows = []
-    for app in SPARSE_APPS:
-        r0 = compiler.compile(ALL_APPS[app], compute_only)
-        r1 = compiler.compile(ALL_APPS[app],
-                              PassConfig.full(place_moves=MOVES))
+    for i, app in enumerate(apps):
+        r0, r1 = results[2 * i], results[2 * i + 1]
         rows.append({
             "app": app,
             "compute_mhz": round(r0.sta.max_freq_mhz, 0),
@@ -194,22 +209,24 @@ def sparse_table(compiler: CascadeCompiler) -> List[Dict]:
             "runtime_drop_pct": round(
                 100 * (1 - r1.power.runtime_s / r0.power.runtime_s), 1),
         })
-    _print(rows, "TableII_Fig11_sparse (paper: CP 2-4.4x, EDP 1.5-4.2x, "
+    print_csv(rows, "TableII_Fig11_sparse (paper: CP 2-4.4x, EDP 1.5-4.2x, "
                  "runtime -29..-65%)")
     return rows
 
 
 # versus-unpipelined sparse ratios (paper's abstract quotes both baselines)
-def run_all() -> Dict[str, List[Dict]]:
+def run_all(fast: bool = False) -> Dict[str, List[Dict]]:
+    moves = FAST_MOVES if fast else MOVES
     c = CascadeCompiler()
     t0 = time.time()
     out = {
-        "sta_accuracy": sta_accuracy(c),
-        "dense_incremental": dense_incremental(c),
-        "dense_table": dense_table(c),
-        "flush_hardening": flush_hardening(c),
-        "sparse_incremental": sparse_incremental(c),
-        "sparse_table": sparse_table(c),
+        "sta_accuracy": sta_accuracy(c, moves),
+        "dense_incremental": dense_incremental(c, moves),
+        "dense_table": dense_table(c, moves),
+        "flush_hardening": flush_hardening(c, moves),
+        "sparse_incremental": sparse_incremental(c, moves),
+        "sparse_table": sparse_table(c, moves),
     }
-    print(f"\n[cascade_tables] total {time.time() - t0:.1f}s")
+    print(f"\n[cascade_tables] total {time.time() - t0:.1f}s "
+          f"cache {c.cache.stats()}")
     return out

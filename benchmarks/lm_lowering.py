@@ -3,40 +3,45 @@
 For each of the 10 assigned architectures, lower its block-compute tile to a
 CGRA DFG (repro.core.lmmap) and compile it unpipelined vs fully pipelined —
 the paper's dense bands should hold on LM compute, and the MoE lowering
-exercises the sparse (ready-valid FIFO) path.
+exercises the sparse (ready-valid FIFO) path.  The 2x10 grid of compiles is
+independent, so it goes through ``compile_batch`` in one shot.
 """
 
 from __future__ import annotations
 
 from typing import Dict, List
 
+from benchmarks._util import print_csv
 from repro.configs import ARCHS
 from repro.core.compiler import CascadeCompiler, PassConfig
 from repro.core.lmmap import lower_block
 
 MOVES = 100
+FAST_MOVES = 40
 
 
-def run_all() -> List[Dict]:
+def run_all(fast: bool = False) -> List[Dict]:
+    moves = FAST_MOVES if fast else MOVES
     c = CascadeCompiler()
+    archs = list(ARCHS.items())
+    specs = {name: lower_block(cfg) for name, cfg in archs}
+    jobs = [(specs[name], cfg_pass)
+            for name, _ in archs
+            for cfg_pass in (PassConfig.unpipelined(place_moves=moves),
+                             PassConfig.full(place_moves=moves))]
+    results = c.compile_batch(jobs)
     rows = []
-    for name, cfg in ARCHS.items():
-        spec = lower_block(cfg)
-        r0 = c.compile(spec, PassConfig.unpipelined(place_moves=MOVES))
-        r1 = c.compile(spec, PassConfig.full(place_moves=MOVES))
+    for i, (name, cfg) in enumerate(archs):
+        r0, r1 = results[2 * i], results[2 * i + 1]
         rows.append({
             "arch": name,
             "family": cfg.family,
-            "sparse_path": int(spec.sparse),
+            "sparse_path": int(specs[name].sparse),
             "unpip_mhz": round(r0.sta.max_freq_mhz, 0),
             "pip_mhz": round(r1.sta.max_freq_mhz, 0),
             "cp_ratio": round(r0.sta.critical_path_ns /
                               r1.sta.critical_path_ns, 2),
             "edp_ratio": round(r0.power.edp_js / r1.power.edp_js, 2),
         })
-    print("\n== LM block -> CGRA lowering (Cascade on assigned archs) ==")
-    cols = list(rows[0])
-    print(",".join(cols))
-    for r in rows:
-        print(",".join(str(r[k]) for k in cols))
+    print_csv(rows, "LM block -> CGRA lowering (Cascade on assigned archs)")
     return rows

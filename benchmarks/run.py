@@ -24,18 +24,21 @@ def _band(name: str, lo, hi, values, allow_slack=0.0) -> str:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="cascade|lm|roofline|pipeline")
+                    help="cascade|lm|roofline|pipeline|ablations")
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced SA move counts / sweep grids for a quick "
+                         "smoke run (tables keep their shape, lose accuracy)")
     args = ap.parse_args()
     t0 = time.time()
     results = {}
 
     if args.only in (None, "cascade"):
         from benchmarks import cascade_tables
-        results.update(cascade_tables.run_all())
+        results.update(cascade_tables.run_all(fast=args.fast))
 
     if args.only in (None, "lm"):
         from benchmarks import lm_lowering
-        results["lm_lowering"] = lm_lowering.run_all()
+        results["lm_lowering"] = lm_lowering.run_all(fast=args.fast)
 
     if args.only in (None, "pipeline"):
         from benchmarks import pipeline_partition
@@ -43,7 +46,7 @@ def main() -> None:
 
     if args.only in (None, "ablations"):
         from benchmarks import ablations
-        results["ablations"] = ablations.run_all()
+        results["ablations"] = ablations.run_all(fast=args.fast)
 
     if args.only in (None, "roofline"):
         from benchmarks import roofline

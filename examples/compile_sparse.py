@@ -18,11 +18,12 @@ def main():
     print(f"== sparse pipelining: {app.name} ==")
 
     # compute-pipelining-only baseline (sparse apps carry input FIFOs by
-    # construction, Section VIII-D) vs the full flow
-    base = compiler.compile(app, PassConfig(
-        broadcast_pipelining=False, placement_alpha=1.0, post_pnr=False,
-        low_unroll_dup=False))
-    full = compiler.compile(app, PassConfig.full())
+    # construction, Section VIII-D) vs the full flow — one batch call
+    base, full = compiler.compile_batch([
+        (app, PassConfig(broadcast_pipelining=False, placement_alpha=1.0,
+                         post_pnr=False, low_unroll_dup=False)),
+        (app, PassConfig.full()),
+    ])
     print(f"compute-only: {base.summary()}")
     print(f"full        : {full.summary()}")
     print(f"critical path ratio {base.sta.critical_path_ns / full.sta.critical_path_ns:.2f}x "

@@ -11,12 +11,17 @@ from .apps import ALL_APPS, DENSE_APPS, SPARSE_APPS, AppSpec
 from .branch_delay import (arrival_cycles_dfg, check_matched_dfg,
                            check_matched_netlist, match_dfg, match_netlist)
 from .broadcast import broadcast_pipelining
-from .compiler import CascadeCompiler, CompileResult, PassConfig
+from .cache import (DEFAULT_CACHE, CompileCache, app_fingerprint, compile_key,
+                    dfg_fingerprint)
+from .compiler import (CascadeCompiler, CompileResult, PassConfig,
+                       compile_batch)
 from .dfg import DFG
 from .flush import add_soft_flush, remove_flush
 from .interconnect import Fabric, Hop, Tile
 from .netlist import Netlist, RoutedDesign, extract_netlist
-from .pipelining import collapse_reg_chains, compute_pipelining
+from .passes import (DEFAULT_SCHEDULE, PASS_REGISTRY, CompileContext, Pass,
+                     PassPipeline, register_pass)
+from .pipelining import collapse_reg_chains, compute_pipelining, find_reg_chains
 from .place import PlaceParams, place, placement_stats
 from .post_pnr import PostPnRParams, post_pnr_pipeline
 from .power import EnergyParams, PowerReport, power_report
@@ -29,7 +34,11 @@ from .unroll import max_copies, subfabric_for
 
 __all__ = [
     "ALL_APPS", "DENSE_APPS", "SPARSE_APPS", "AppSpec",
-    "CascadeCompiler", "CompileResult", "PassConfig",
+    "CascadeCompiler", "CompileResult", "PassConfig", "compile_batch",
+    "CompileCache", "DEFAULT_CACHE", "compile_key", "app_fingerprint",
+    "dfg_fingerprint",
+    "CompileContext", "Pass", "PassPipeline", "PASS_REGISTRY",
+    "DEFAULT_SCHEDULE", "register_pass", "find_reg_chains",
     "DFG", "Fabric", "Hop", "Tile", "Netlist", "RoutedDesign",
     "TimingModel", "TECH_NS", "generate_timing_model",
     "analyze", "sdf_simulate_fmax", "STAReport",

@@ -1,0 +1,130 @@
+"""Compile cache — content-hash keyed memoization of Cascade compiles.
+
+Every benchmark table and most tests re-compile identical
+``(app, PassConfig, fabric, timing)`` tuples; the flow is deterministic
+(seeded simulated annealing), so the result is too.  The cache keys on a
+SHA-256 fingerprint of everything that influences the output:
+
+* the app's *content* — the DFG its builder emits for one copy, plus every
+  workload field of the :class:`~repro.core.apps.AppSpec` (so two specs
+  with the same name but different builders never collide);
+* the full ``PassConfig`` (including a custom pass schedule, if any);
+* the fabric geometry, the timing-model entries, the energy parameters;
+* the unroll override and the verify flag.
+
+Thread-safe (``compile_batch`` shares one cache across workers), bounded
+LRU, with hit/miss counters exposed via :meth:`CompileCache.stats`.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import threading
+from collections import OrderedDict
+from dataclasses import asdict, fields as dc_fields
+from typing import Any, Dict, Optional
+
+from .apps import AppSpec
+from .dfg import DFG
+from .interconnect import Fabric
+from .power import EnergyParams
+from .timing_model import TimingModel
+
+
+def dfg_fingerprint(g: DFG) -> str:
+    """Stable structural digest of a DFG (nodes + edges + flags)."""
+    nodes = sorted(
+        (n.name, n.kind, n.op, n.width, n.latency, n.depth, n.value,
+         n.input_reg, tuple(sorted((k, repr(v)) for k, v in n.meta.items())))
+        for n in g.nodes.values())
+    edges = sorted((e.src, e.dst, e.port, e.width) for e in g.edges)
+    h = hashlib.sha256()
+    h.update(repr((g.name, g.sparse, nodes, edges)).encode())
+    return h.hexdigest()
+
+
+def app_fingerprint(app: AppSpec) -> str:
+    """Content hash of an app spec: a two-copy build + all workload fields.
+
+    Building copies is cheap (graphs are a few hundred nodes) and captures
+    the *behaviour* of the builder callable, which may be a closure (e.g.
+    ``lmmap.lower_block``) and therefore has no stable identity of its own.
+    Two copies are built so per-copy-index divergence shows up in the hash;
+    beyond that the repo-wide invariant holds that copies are identical
+    stamps (copy index only feeds node names), which keeps higher copy
+    counts out of the key.
+    """
+    spec_fields = (app.name, app.sparse, tuple(app.frame), app.unroll,
+                   app.unroll_baseline, app.work_per_output, app.work_tokens,
+                   app.line_width)
+    return hashlib.sha256(
+        (dfg_fingerprint(app.build(2)) + repr(spec_fields)).encode()
+    ).hexdigest()
+
+
+def compile_key(app: AppSpec, config: Any, fabric: Fabric,
+                timing: TimingModel, energy: EnergyParams,
+                unroll: Optional[int] = None, verify: bool = False) -> str:
+    """The full content-hash cache key for one compile invocation."""
+    cfg_items = tuple(sorted(asdict(config).items()))
+    fabric_items = tuple(
+        (f.name, getattr(fabric, f.name)) for f in dc_fields(fabric))
+    timing_items = (timing.fabric_name,
+                    tuple(sorted(timing.entries.items())))
+    energy_items = tuple(sorted(asdict(energy).items()))
+    h = hashlib.sha256()
+    h.update(app_fingerprint(app).encode())
+    h.update(repr((cfg_items, fabric_items, timing_items, energy_items,
+                   unroll, verify)).encode())
+    return h.hexdigest()
+
+
+class CompileCache:
+    """Bounded, thread-safe LRU cache of :class:`CompileResult` objects."""
+
+    def __init__(self, maxsize: int = 256):
+        self.maxsize = maxsize
+        self._data: "OrderedDict[str, Any]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def get(self, key: str) -> Optional[Any]:
+        with self._lock:
+            if key in self._data:
+                self._data.move_to_end(key)
+                self.hits += 1
+                return self._data[key]
+            self.misses += 1
+            return None
+
+    def put(self, key: str, value: Any) -> None:
+        with self._lock:
+            self._data[key] = value
+            self._data.move_to_end(key)
+            while len(self._data) > self.maxsize:
+                self._data.popitem(last=False)
+                self.evictions += 1
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data.clear()
+            self.hits = self.misses = self.evictions = 0
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            total = self.hits + self.misses
+            return {"hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions, "entries": len(self._data),
+                    "hit_rate": round(self.hits / total, 3) if total else 0.0}
+
+
+#: Process-wide default cache.  Compilers created without an explicit cache
+#: share it, so repeated benchmark invocations within one process reuse each
+#: other's compiles (keys are full content hashes, so sharing is safe across
+#: fabrics/timings/configs).  Pass ``cache=CompileCache()`` for isolation.
+DEFAULT_CACHE = CompileCache(maxsize=512)

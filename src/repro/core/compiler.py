@@ -7,31 +7,33 @@
 Every Cascade technique is individually toggleable (``PassConfig``) so the
 benchmarks can reproduce the paper's incremental figures (Fig. 7/10), and the
 flush broadcast can be routed in software (baseline) or hardened (Section VI).
+
+The flow itself lives in :mod:`repro.core.passes` as a staged pass pipeline;
+``compile()`` is a thin driver that builds a :class:`CompileContext`, runs the
+schedule declared by the config, and memoizes results in a content-hash
+:class:`~repro.core.cache.CompileCache`.  ``compile_batch()`` compiles many
+(app, config) pairs concurrently, deduplicating identical jobs through the
+cache.
 """
 
 from __future__ import annotations
 
+import copy
 import time
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field, replace as dc_replace
-from typing import Dict, Optional
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 from .apps import AppSpec
-from .branch_delay import check_matched_netlist, match_dfg
-from .broadcast import broadcast_pipelining
-from .dfg import DFG, PE
-from .flush import FLUSH, add_soft_flush
+from .cache import DEFAULT_CACHE, CompileCache, compile_key
 from .interconnect import Fabric
-from .netlist import Netlist, RoutedDesign, extract_netlist
-from .pipelining import compute_pipelining
-from .place import PlaceParams, place
-from .post_pnr import PostPnRParams, PostPnRResult, post_pnr_pipeline
+from .netlist import RoutedDesign
+from .passes import CompileContext, PassPipeline
+from .post_pnr import PostPnRResult
 from .power import EnergyParams, PowerReport, power_report
-from .route import RouteParams, route
-from .schedule import Schedule, schedule_round2
-from .sim import equivalent
-from .sta import STAReport, analyze
+from .schedule import Schedule
+from .sta import STAReport
 from .timing_model import TimingModel, generate_timing_model
-from .unroll import max_copies, subfabric_for
 
 
 @dataclass
@@ -50,6 +52,7 @@ class PassConfig:
     harden_flush: bool = True
     seed: int = 0
     place_moves: int = 400            # per node
+    schedule: Optional[Tuple[str, ...]] = None  # custom pass schedule (names)
 
     @classmethod
     def unpipelined(cls, **kw) -> "PassConfig":
@@ -74,6 +77,7 @@ class CompileResult:
     pass_stats: Dict[str, object] = field(default_factory=dict)
     post_pnr: Optional[PostPnRResult] = None
     compile_seconds: float = 0.0
+    cache_hit: bool = False
 
     def summary(self) -> dict:
         return {
@@ -85,99 +89,116 @@ class CompileResult:
         }
 
 
+#: One batch job: ``(app, config)`` — optionally ``(app, config, unroll)``.
+CompileJob = Union[Tuple[AppSpec, Optional[PassConfig]],
+                   Tuple[AppSpec, Optional[PassConfig], Optional[int]]]
+
+
 class CascadeCompiler:
     def __init__(self, fabric: Optional[Fabric] = None,
                  timing: Optional[TimingModel] = None,
-                 energy: Optional[EnergyParams] = None):
+                 energy: Optional[EnergyParams] = None,
+                 cache: Optional[CompileCache] = None):
         self.fabric = fabric or Fabric()
         self.timing = timing or generate_timing_model(self.fabric)
         self.energy = energy or EnergyParams()
+        self.cache = DEFAULT_CACHE if cache is None else cache
 
+    # -- single compile ----------------------------------------------------
     def compile(self, app: AppSpec, config: Optional[PassConfig] = None,
-                unroll: Optional[int] = None, verify: bool = False) -> CompileResult:
+                unroll: Optional[int] = None, verify: bool = False,
+                use_cache: bool = True,
+                pipeline: Optional[PassPipeline] = None,
+                _key: Optional[str] = None) -> CompileResult:
+        """Run the pass pipeline for one (app, config) pair.
+
+        With ``use_cache`` (default), deterministic repeats return the
+        memoized result (``result.cache_hit`` is set on the returned copy);
+        pass ``pipeline`` to override the schedule declared by the config.
+        The cache stores and serves deep copies, so callers may freely
+        mutate what they get back.  ``_key`` lets ``compile_batch`` reuse a
+        content hash it already computed.
+        """
         cfg = config or PassConfig()
         t0 = time.time()
-        pass_stats: Dict[str, object] = {}
-
-        if unroll is None:
-            unroll = (app.unroll if (cfg.compute_pipelining or cfg.post_pnr)
-                      else (app.unroll_baseline or app.unroll))
-
-        # -- graph construction (low unrolling duplication, Section V-E) ----
-        if cfg.low_unroll_dup and not app.sparse:
-            g = app.build(1)
-            copies = unroll
-        else:
-            g = app.build(unroll)
-            copies = 1
-
-        # -- graph-level pipelining passes ----------------------------------
-        if cfg.compute_pipelining or app.sparse:
-            # sparse apps carry input FIFOs by construction: compute
-            # pipelining is always on for them (Section VIII-D)
-            if not app.sparse:
-                pass_stats["compute"] = compute_pipelining(g, cfg.rf_threshold)
-            else:
-                pass_stats["compute"] = {"sparse_default_fifos": True}
-        if cfg.broadcast_pipelining and not app.sparse:
-            pass_stats["broadcast"] = broadcast_pipelining(
-                g, cfg.broadcast_fanout, cfg.broadcast_arity)
-        if not cfg.harden_flush and not app.sparse:
-            pass_stats["flush_fanout"] = add_soft_flush(g)
-
-        source_dfg = g.copy()
-
-        # -- place & route ---------------------------------------------------
-        nl = extract_netlist(g)
-        if cfg.low_unroll_dup and not app.sparse:
-            fabric = subfabric_for(nl, self.fabric)
-            copies = min(copies, max_copies(nl, self.fabric, fabric))
-        else:
-            fabric = self.fabric
-        tm = generate_timing_model(fabric) if fabric is not self.fabric else self.timing
-        pp = PlaceParams(alpha=cfg.placement_alpha, gamma=cfg.placement_gamma,
-                         seed=cfg.seed, moves_per_node=cfg.place_moves)
-        placement = place(nl, fabric, pp)
-        design = route(nl, placement, fabric)
-        design.unroll_copies = copies
-        design.source_dfg = source_dfg
-
-        # -- post-PnR pipelining (Section V-D) -------------------------------
-        ppr = None
-        if cfg.post_pnr:
-            budget = cfg.post_pnr_budget
-            if budget is None:
-                budget = fabric.rows * fabric.cols // 2
-            ppr = post_pnr_pipeline(design, tm, PostPnRParams(
-                max_iters=cfg.post_pnr_iters, register_budget=budget))
-            pass_stats["post_pnr"] = {
-                "initial_ns": ppr.initial_ns, "final_ns": ppr.final_ns,
-                "registers_added": ppr.registers_added,
-                "stop": ppr.stop_reason}
-
-        if not app.sparse and not check_matched_netlist(nl):
-            raise AssertionError(f"{app.name}: branch delays unmatched after flow")
-
-        # -- schedule round 2 + reports --------------------------------------
-        rep = analyze(design, tm)
-        iters = app.iterations_for(copies if copies > 1 else unroll)
-        stall = 0.12 if app.sparse else 0.0
-        sched = schedule_round2(design, iters, stall_factor=stall)
-        pwr = power_report(design, rep.max_freq_mhz, sched, self.energy)
-
-        if verify and not app.sparse:
-            ref = app.build(1 if (cfg.low_unroll_dup and not app.sparse) else unroll)
-            import numpy as _np
-            rng = _np.random.default_rng(0)
-            ins = {n: rng.integers(0, 255, size=48).tolist()
-                   for n, nd in ref.nodes.items() if nd.kind == "input"}
-            final = design.netlist.to_dfg()
-            if not equivalent(ref, final, ins, n=32):
-                raise AssertionError(f"{app.name}: pipelined design is not "
-                                     f"functionally equivalent to the source app")
-            pass_stats["verified"] = True
-
-        return CompileResult(
-            app=app, config=cfg, design=design, sta=rep, schedule=sched,
-            power=pwr, pass_stats=pass_stats, post_pnr=ppr,
+        key = None
+        if use_cache and self.cache is not None and pipeline is None:
+            key = _key or compile_key(app, cfg, self.fabric, self.timing,
+                                      self.energy, unroll=unroll,
+                                      verify=verify)
+            hit = self.cache.get(key)
+            if hit is not None:
+                return dc_replace(copy.deepcopy(hit), cache_hit=True,
+                                  compile_seconds=time.time() - t0)
+        ctx = CompileContext(app=app, config=cfg, fabric=self.fabric,
+                             timing=self.timing, energy=self.energy,
+                             unroll=unroll, verify=verify)
+        (pipeline or PassPipeline.from_config(cfg)).run(ctx)
+        result = CompileResult(
+            app=app, config=cfg, design=ctx.design, sta=ctx.sta,
+            schedule=ctx.schedule, power=ctx.power,
+            pass_stats=ctx.pass_stats, post_pnr=ctx.post_pnr,
             compile_seconds=time.time() - t0)
+        if key is not None:
+            # store a private deep copy: the caller's mutations (and later
+            # hitters') must never reach back into the cache entry
+            self.cache.put(key, copy.deepcopy(result))
+        return result
+
+    # -- batch compile -----------------------------------------------------
+    def compile_batch(self, jobs: Iterable[CompileJob],
+                      max_workers: Optional[int] = None,
+                      verify: bool = False,
+                      use_cache: bool = True) -> List[CompileResult]:
+        """Compile many (app, config[, unroll]) jobs through a worker pool.
+
+        Results come back in job order and are bit-identical to serial
+        ``compile()`` calls (the flow is seeded and deterministic).  Jobs
+        with identical content hashes are compiled once; repeat invocations
+        are served from the cache.  Those two effects are where the speedup
+        comes from: the SA placement inner loop is pure Python, so the
+        thread pool itself adds little parallelism (a process-pool backend
+        is the roadmap item for that).
+        """
+        norm: List[Tuple[AppSpec, PassConfig, Optional[int]]] = []
+        for job in jobs:
+            app, cfg = job[0], job[1] or PassConfig()
+            unroll = job[2] if len(job) > 2 else None
+            norm.append((app, cfg, unroll))
+        if not norm:
+            return []
+
+        keys: List[Optional[str]] = []
+        for app, cfg, unroll in norm:
+            keys.append(compile_key(app, cfg, self.fabric, self.timing,
+                                    self.energy, unroll=unroll, verify=verify)
+                        if (use_cache and self.cache is not None) else None)
+
+        futures: Dict[int, "object"] = {}
+        first_for_key: Dict[str, int] = {}
+        workers = max_workers or min(8, len(norm))
+        with ThreadPoolExecutor(max_workers=workers) as ex:
+            for i, (app, cfg, unroll) in enumerate(norm):
+                k = keys[i]
+                if k is not None and k in first_for_key:
+                    continue                      # duplicate job: share result
+                if k is not None:
+                    first_for_key[k] = i
+                futures[i] = ex.submit(self.compile, app, cfg, unroll=unroll,
+                                       verify=verify, use_cache=use_cache,
+                                       _key=k)
+            out: List[CompileResult] = []
+            for i, k in enumerate(keys):
+                owner = first_for_key.get(k, i) if k is not None else i
+                r = futures[owner].result()
+                if owner != i:               # duplicate job: private copy
+                    r = dc_replace(copy.deepcopy(r), cache_hit=True)
+                out.append(r)
+        return out
+
+
+def compile_batch(jobs: Iterable[CompileJob],
+                  compiler: Optional[CascadeCompiler] = None,
+                  **kw) -> List[CompileResult]:
+    """Module-level convenience: batch-compile with a (fresh) compiler."""
+    return (compiler or CascadeCompiler()).compile_batch(jobs, **kw)

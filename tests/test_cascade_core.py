@@ -8,7 +8,8 @@ here with the cycle-accurate functional simulator on random DAGs.
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.apps import ALL_APPS, DENSE_APPS, SPARSE_APPS
 from repro.core.branch_delay import (arrival_cycles_dfg, check_matched_dfg,

@@ -4,7 +4,8 @@ cell bookkeeping, pipeline partitioning properties."""
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 # lock the backend to the default single device BEFORE repro.launch.dryrun
 # (imported lazily below) sets XLA_FLAGS for 512 placeholder devices — the

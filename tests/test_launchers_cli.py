@@ -7,6 +7,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow        # subprocess smokes: seconds each
+
 ENV = {**os.environ, "PYTHONPATH": "src"}
 
 

@@ -43,6 +43,7 @@ def test_smoke_forward_shapes_and_finite(arch):
     assert bool(jnp.isfinite(aux))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_NAMES)
 def test_smoke_train_step_no_nans(arch):
     cfg = get_config(arch).smoke()

@@ -1,0 +1,279 @@
+"""Pass-pipeline subsystem: schedule ordering, compile cache, batch API,
+and register-chain collapse edge cases."""
+
+import json
+
+import pytest
+
+from repro.core import (ALL_APPS, DENSE_APPS, CascadeCompiler, CompileCache,
+                        PassConfig, PassPipeline, compile_key)
+from repro.core.cache import app_fingerprint, dfg_fingerprint
+from repro.core.dfg import DFG, INPUT, OUTPUT, PE, REG, RF
+from repro.core.passes import DEFAULT_SCHEDULE, PASS_REGISTRY, register_pass
+from repro.core.pipelining import (collapse_reg_chains, compute_pipelining,
+                                   find_reg_chains)
+
+
+# ---------------------------------------------------------------------------
+# register-chain edge cases (Section V-A's RF collapse)
+# ---------------------------------------------------------------------------
+
+
+def _reg_chain_graph(n_regs: int) -> DFG:
+    g = DFG("chain")
+    src = g.add(INPUT, name="in0")
+    cur = src
+    for _ in range(n_regs):
+        r = g.add(REG)
+        g.connect(cur, r)
+        cur = r
+    out = g.add(OUTPUT, name="out0")
+    g.connect(cur, out)
+    return g.validate()
+
+
+def test_chain_exactly_at_threshold_collapses():
+    g = _reg_chain_graph(4)
+    assert [len(c) for c in find_reg_chains(g)] == [4]
+    assert collapse_reg_chains(g, rf_threshold=4) == 1
+    assert g.count(REG) == 0
+    assert g.count(RF) == 1
+    rf = next(n for n in g.nodes.values() if n.kind == RF)
+    assert rf.depth == 4                      # latency preserved exactly
+    assert rf.meta.get("pipelining") is True
+
+
+def test_chain_below_threshold_stays():
+    g = _reg_chain_graph(3)
+    assert collapse_reg_chains(g, rf_threshold=4) == 0
+    assert g.count(REG) == 3 and g.count(RF) == 0
+
+
+def test_chain_with_broadcast_point_not_collapsed():
+    """A fanout>1 register inside the chain belongs to the broadcast-tree
+    pass; the linear collapse must leave it alone."""
+    g = DFG("bcast")
+    src = g.add(INPUT, name="in0")
+    r1 = g.add(REG)
+    r2 = g.add(REG)
+    g.connect(src, r1)
+    g.connect(r1, r2)
+    for i in range(2):                        # r2 broadcasts to two sinks
+        o = g.add(OUTPUT, name=f"out{i}")
+        g.connect(r2, o)
+    g.validate()
+    chains = find_reg_chains(g)
+    assert [sorted(c) for c in chains] == [[r1, r2]]
+    assert collapse_reg_chains(g, rf_threshold=2) == 0
+    assert g.count(REG) == 2
+
+
+def test_sparse_graph_skips_rf_collapse():
+    """Sparse graphs pipeline via FIFOs; the RF collapse must not run."""
+    g = ALL_APPS["vecadd"].build(1)
+    assert g.sparse
+    stats = compute_pipelining(g, rf_threshold=2)
+    assert stats["reg_files"] == 0
+    assert g.count(RF) == 0
+
+
+def test_parallel_chains_collapse_independently():
+    g = DFG("par")
+    for k in range(2):
+        src = g.add(INPUT, name=f"in{k}")
+        cur = src
+        for _ in range(5):
+            r = g.add(REG)
+            g.connect(cur, r)
+            cur = r
+        o = g.add(OUTPUT, name=f"out{k}")
+        g.connect(cur, o)
+    g.validate()
+    assert len(find_reg_chains(g)) == 2
+    assert collapse_reg_chains(g, rf_threshold=5) == 2
+    assert g.count(RF) == 2 and g.count(REG) == 0
+
+
+# ---------------------------------------------------------------------------
+# pass pipeline: schedules, ordering, per-pass stats
+# ---------------------------------------------------------------------------
+
+
+def test_default_schedule_registered_and_ordered():
+    pipe = PassPipeline.from_config(PassConfig())
+    assert tuple(pipe.names) == DEFAULT_SCHEDULE
+    assert set(DEFAULT_SCHEDULE) <= set(PASS_REGISTRY)
+
+
+def test_unknown_pass_name_raises():
+    with pytest.raises(KeyError):
+        PassPipeline(["build", "no_such_pass"])
+
+
+def test_duplicate_registration_raises():
+    with pytest.raises(ValueError):
+        register_pass("build")(lambda ctx: None)
+
+
+def test_executed_passes_match_config_gates():
+    c = CascadeCompiler()
+    app = ALL_APPS["unsharp"]
+    full = c.compile(app, PassConfig.full(place_moves=20))
+    unpip = c.compile(app, PassConfig.unpipelined(place_moves=20))
+    assert full.pass_stats["pipeline"] == [
+        "build", "compute_pipelining", "broadcast_pipelining", "pnr",
+        "post_pnr", "match_check", "sta", "schedule_round2", "power"]
+    # unpipelined: no pipelining passes, but the soft flush baseline runs
+    assert unpip.pass_stats["pipeline"] == [
+        "build", "soft_flush", "pnr", "match_check", "sta",
+        "schedule_round2", "power"]
+    # per-pass wall time captured for exactly the executed passes
+    for r in (full, unpip):
+        times = r.pass_stats["pass_times"]
+        assert list(times) == r.pass_stats["pipeline"]
+        assert all(t >= 0 for t in times.values())
+
+
+def test_custom_schedule_via_config():
+    cfg = PassConfig.unpipelined(
+        place_moves=20,
+        schedule=("build", "pnr", "match_check", "sta", "schedule_round2",
+                  "power"))
+    r = CascadeCompiler().compile(ALL_APPS["unsharp"], cfg)
+    assert r.pass_stats["pipeline"] == list(cfg.schedule)
+    assert "soft_flush" not in r.pass_stats["pipeline"]
+
+
+def test_pass_ordering_error_is_diagnosed():
+    """A schedule that runs a pass before its inputs exist must fail loudly,
+    not produce garbage."""
+    bad = PassConfig.full(place_moves=20, schedule=("pnr",))
+    with pytest.raises(RuntimeError, match="pass ordering"):
+        CascadeCompiler().compile(ALL_APPS["unsharp"], bad, use_cache=False)
+
+
+def test_custom_registered_pass_runs():
+    name = "test_only_noop"
+    try:
+        @register_pass(name, stats_key="noop")
+        def _noop(ctx):
+            return {"saw_nodes": len(ctx.graph.nodes)}
+
+        cfg = PassConfig.unpipelined(
+            place_moves=20,
+            schedule=("build", name, "pnr", "match_check", "sta",
+                      "schedule_round2", "power"))
+        r = CascadeCompiler().compile(ALL_APPS["unsharp"], cfg,
+                                      use_cache=False)
+        assert r.pass_stats["noop"]["saw_nodes"] > 0
+        assert name in r.pass_stats["pipeline"]
+    finally:
+        PASS_REGISTRY.pop(name, None)
+
+
+# ---------------------------------------------------------------------------
+# compile cache
+# ---------------------------------------------------------------------------
+
+
+def test_cache_hit_returns_identical_summary():
+    c = CascadeCompiler(cache=CompileCache())   # isolated: exact stat asserts
+    app = ALL_APPS["unsharp"]
+    cfg = PassConfig.full(place_moves=20)
+    r1 = c.compile(app, cfg)
+    r2 = c.compile(app, cfg)
+    assert not r1.cache_hit and r2.cache_hit
+    assert json.dumps(r1.summary()) == json.dumps(r2.summary())
+    s = c.cache.stats()
+    assert s["hits"] == 1 and s["misses"] == 1
+
+
+def test_cache_keys_separate_configs_and_flags():
+    c = CascadeCompiler()
+    app = ALL_APPS["unsharp"]
+    base = compile_key(app, PassConfig.full(), c.fabric, c.timing, c.energy)
+    assert base == compile_key(app, PassConfig.full(), c.fabric, c.timing,
+                               c.energy)
+    assert base != compile_key(app, PassConfig.full(rf_threshold=5),
+                               c.fabric, c.timing, c.energy)
+    assert base != compile_key(app, PassConfig.unpipelined(), c.fabric,
+                               c.timing, c.energy)
+    assert base != compile_key(app, PassConfig.full(), c.fabric, c.timing,
+                               c.energy, verify=True)
+    assert base != compile_key(app, PassConfig.full(), c.fabric, c.timing,
+                               c.energy, unroll=2)
+    assert base != compile_key(ALL_APPS["gaussian"], PassConfig.full(),
+                               c.fabric, c.timing, c.energy)
+
+
+def test_app_fingerprint_is_content_hash():
+    assert app_fingerprint(ALL_APPS["unsharp"]) == \
+        app_fingerprint(ALL_APPS["unsharp"])
+    assert app_fingerprint(ALL_APPS["unsharp"]) != \
+        app_fingerprint(ALL_APPS["camera"])
+    g1, g2 = ALL_APPS["ttv"].build(1), ALL_APPS["ttv"].build(1)
+    assert dfg_fingerprint(g1) == dfg_fingerprint(g2)
+
+
+def test_cache_entries_isolated_from_caller_mutation():
+    """Cached results are deep-copied on put and get: mutating what a
+    caller got back must never change what later callers see."""
+    c = CascadeCompiler(cache=CompileCache())
+    app = ALL_APPS["unsharp"]
+    cfg = PassConfig.full(place_moves=20)
+    r1 = c.compile(app, cfg)
+    r1.pass_stats["poison"] = True            # mutate the miss result
+    r1.design.unroll_copies = 999
+    r2 = c.compile(app, cfg)
+    assert r2.cache_hit
+    assert "poison" not in r2.pass_stats and r2.design.unroll_copies != 999
+    r2.design.placement.clear()               # mutate a hit result
+    r3 = c.compile(app, cfg)
+    assert r3.design.placement
+
+
+def test_cache_bypass_and_lru_eviction():
+    c = CascadeCompiler(cache=CompileCache(maxsize=1))
+    app = ALL_APPS["unsharp"]
+    r1 = c.compile(app, PassConfig.full(place_moves=20), use_cache=False)
+    assert len(c.cache) == 0                 # bypass never stores
+    c.compile(app, PassConfig.full(place_moves=20))
+    c.compile(app, PassConfig.unpipelined(place_moves=20))
+    assert len(c.cache) == 1                 # first entry evicted
+    assert c.cache.stats()["evictions"] == 1
+    assert not r1.cache_hit
+
+
+# ---------------------------------------------------------------------------
+# compile_batch: determinism vs serial + dedup + repeat speedup
+# ---------------------------------------------------------------------------
+
+
+def test_compile_batch_matches_serial_exactly():
+    jobs = [(ALL_APPS[a], PassConfig.full(place_moves=20))
+            for a in sorted(DENSE_APPS)]
+    serial = [CascadeCompiler().compile(app, cfg, use_cache=False)
+              for app, cfg in jobs]
+    batch = CascadeCompiler().compile_batch(jobs)
+    assert [json.dumps(r.summary()) for r in batch] == \
+        [json.dumps(r.summary()) for r in serial]
+
+
+def test_compile_batch_dedups_and_serves_repeats_from_cache():
+    c = CascadeCompiler(cache=CompileCache())   # isolated: exact stat asserts
+    app = ALL_APPS["unsharp"]
+    cfg = PassConfig.full(place_moves=20)
+    first = c.compile_batch([(app, cfg), (app, cfg), (app, cfg)])
+    assert c.cache.stats()["misses"] == 1    # identical jobs compiled once
+    assert len({json.dumps(r.summary()) for r in first}) == 1
+    again = c.compile_batch([(app, cfg)])
+    assert again[0].cache_hit
+    assert json.dumps(again[0].summary()) == json.dumps(first[0].summary())
+
+
+def test_compile_batch_sparse_and_empty():
+    c = CascadeCompiler()
+    assert c.compile_batch([]) == []
+    (r,) = c.compile_batch([(ALL_APPS["vecadd"],
+                             PassConfig.full(place_moves=20))])
+    assert r.summary()["app"] == "vecadd"

@@ -9,6 +9,8 @@ import pytest
 from repro.core.apps import ALL_APPS
 from repro.core.compiler import CascadeCompiler, PassConfig
 
+pytestmark = pytest.mark.slow        # full-flow integration: seconds each
+
 
 def test_paper_headline_end_to_end():
     """Compile one dense app unpipelined vs full flow and check the
