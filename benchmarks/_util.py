@@ -2,6 +2,9 @@
 
 from __future__ import annotations
 
+import json
+import os
+import time
 from typing import Dict, List
 
 
@@ -14,3 +17,42 @@ def print_csv(rows: List[Dict], name: str):
     print(",".join(cols))
     for r in rows:
         print(",".join(str(r[c]) for c in cols))
+
+
+def print_batch_stats(compiler, label: str):
+    """One-line report of the last ``compile_batch``: backend, workers,
+    cache-tier hit split — the PnR-wall-clock story of the table."""
+    b = compiler.last_batch
+    if not b:
+        return
+    print(f"[batch] {label}: backend={b.get('backend')} "
+          f"workers={b.get('workers')} jobs={b.get('jobs')} "
+          f"unique={b.get('unique')} cache_hits={b.get('cache_hits')} "
+          f"compiled={b.get('compiled')} wall={b.get('wall_seconds')}s")
+
+
+def append_bench_record(path: str, record: Dict) -> None:
+    """Append one trajectory record to the ``BENCH_pnr.json`` file.
+
+    The file is a JSON list so successive runs (and successive PRs' CI
+    jobs) accumulate a wall-clock trajectory; a corrupt or legacy file is
+    reset rather than crashing the benchmark run.
+    """
+    record = {"timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"), **record}
+    history: List[Dict] = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                loaded = json.load(f)
+            if isinstance(loaded, list):
+                history = loaded
+        except (OSError, ValueError):
+            pass
+    history.append(record)
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as f:
+        json.dump(history, f, indent=2)
+        f.write("\n")
+    os.replace(tmp, path)
+    print(f"[bench] appended PnR trajectory record -> {path} "
+          f"({len(history)} records)")

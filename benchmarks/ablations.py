@@ -13,7 +13,7 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional, Sequence
 
-from benchmarks._util import print_csv
+from benchmarks._util import print_batch_stats, print_csv
 from repro.core.apps import ALL_APPS
 from repro.core.compiler import CascadeCompiler, PassConfig
 
@@ -62,12 +62,15 @@ def budget_sweep(app: str = "unsharp",
     return rows
 
 
-def run_all(fast: bool = False) -> Dict[str, List[Dict]]:
-    c = CascadeCompiler()
+def run_all(fast: bool = False, backend: str = "auto",
+            workers: Optional[int] = None) -> Dict[str, List[Dict]]:
+    c = CascadeCompiler(batch_backend=backend, batch_workers=workers)
     moves = FAST_MOVES if fast else MOVES
-    return {
+    out = {
         "alpha": alpha_sweep(compiler=c, moves=moves,
                              alphas=FAST_ALPHAS if fast else ALPHAS),
         "budget": budget_sweep(compiler=c, moves=moves,
                                budgets=FAST_BUDGETS if fast else BUDGETS),
     }
+    print_batch_stats(c, "ablations")
+    return out

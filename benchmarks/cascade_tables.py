@@ -24,7 +24,9 @@ from typing import Dict, List
 
 import numpy as np
 
-from benchmarks._util import print_csv
+from typing import Optional
+
+from benchmarks._util import print_batch_stats, print_csv
 from repro.core.apps import ALL_APPS, DENSE_APPS, SPARSE_APPS
 from repro.core.compiler import CascadeCompiler, PassConfig
 from repro.core.sta import sdf_simulate_fmax
@@ -215,18 +217,20 @@ def sparse_table(compiler: CascadeCompiler, moves: int = MOVES) -> List[Dict]:
 
 
 # versus-unpipelined sparse ratios (paper's abstract quotes both baselines)
-def run_all(fast: bool = False) -> Dict[str, List[Dict]]:
+def run_all(fast: bool = False, backend: str = "auto",
+            workers: Optional[int] = None) -> Dict[str, List[Dict]]:
     moves = FAST_MOVES if fast else MOVES
-    c = CascadeCompiler()
+    c = CascadeCompiler(batch_backend=backend, batch_workers=workers)
     t0 = time.time()
-    out = {
-        "sta_accuracy": sta_accuracy(c, moves),
-        "dense_incremental": dense_incremental(c, moves),
-        "dense_table": dense_table(c, moves),
-        "flush_hardening": flush_hardening(c, moves),
-        "sparse_incremental": sparse_incremental(c, moves),
-        "sparse_table": sparse_table(c, moves),
-    }
+    out = {}
+    for name, fn in (("sta_accuracy", sta_accuracy),
+                     ("dense_incremental", dense_incremental),
+                     ("dense_table", dense_table),
+                     ("flush_hardening", flush_hardening),
+                     ("sparse_incremental", sparse_incremental),
+                     ("sparse_table", sparse_table)):
+        out[name] = fn(c, moves)
+        print_batch_stats(c, name)
     print(f"\n[cascade_tables] total {time.time() - t0:.1f}s "
           f"cache {c.cache.stats()}")
     return out

@@ -9,9 +9,9 @@ independent, so it goes through ``compile_batch`` in one shot.
 
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Optional
 
-from benchmarks._util import print_csv
+from benchmarks._util import print_batch_stats, print_csv
 from repro.configs import ARCHS
 from repro.core.compiler import CascadeCompiler, PassConfig
 from repro.core.lmmap import lower_block
@@ -20,9 +20,10 @@ MOVES = 100
 FAST_MOVES = 40
 
 
-def run_all(fast: bool = False) -> List[Dict]:
+def run_all(fast: bool = False, backend: str = "auto",
+            workers: Optional[int] = None) -> List[Dict]:
     moves = FAST_MOVES if fast else MOVES
-    c = CascadeCompiler()
+    c = CascadeCompiler(batch_backend=backend, batch_workers=workers)
     archs = list(ARCHS.items())
     specs = {name: lower_block(cfg) for name, cfg in archs}
     jobs = [(specs[name], cfg_pass)
@@ -44,4 +45,5 @@ def run_all(fast: bool = False) -> List[Dict]:
             "edp_ratio": round(r0.power.edp_js / r1.power.edp_js, 2),
         })
     print_csv(rows, "LM block -> CGRA lowering (Cascade on assigned archs)")
+    print_batch_stats(c, "lm_lowering")
     return rows

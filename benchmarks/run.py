@@ -2,14 +2,22 @@
 beyond-paper benches.
 
     PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+        [--backend auto|thread|process] [--workers N] [--no-disk-cache]
+        [--bench-out PATH]
 
 Prints CSV blocks per artifact and a final band-check against the paper's
-headline claims.
+headline claims.  Each run appends a record to ``BENCH_pnr.json`` —
+backend, worker count, per-section wall seconds, cache-tier hit rates — so
+the PnR wall-clock trajectory is tracked across runs (and across PRs via
+the CI artifact).  The disk compile cache is attached by default, so a
+second benchmark process skips every recompile; ``--no-disk-cache`` forces
+cold compiles.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
@@ -22,35 +30,67 @@ def _band(name: str, lo, hi, values, allow_slack=0.0) -> str:
 
 
 def main() -> None:
+    from repro.core import (BATCH_BACKENDS, DEFAULT_CACHE, attach_disk_cache,
+                            worker_count)
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="cascade|lm|roofline|pipeline|ablations")
     ap.add_argument("--fast", action="store_true",
                     help="reduced SA move counts / sweep grids for a quick "
                          "smoke run (tables keep their shape, lose accuracy)")
+    ap.add_argument("--backend", default="auto", choices=BATCH_BACKENDS,
+                    help="compile_batch backend (process = multi-core PnR)")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="batch worker count (default: CASCADE_WORKERS or "
+                         "min(8, cpu count))")
+    ap.add_argument("--no-disk-cache", action="store_true",
+                    help="skip the disk compile-cache tier (force cold "
+                         "compiles)")
+    ap.add_argument("--bench-out", default="BENCH_pnr.json",
+                    help="PnR wall-clock trajectory file to append to")
     args = ap.parse_args()
+
+    if args.no_disk_cache:
+        # also detach a tier CASCADE_DISK_CACHE=1 attached at import —
+        # "--no-disk-cache" must actually mean cold compiles
+        DEFAULT_CACHE.disk = None
+    else:
+        disk = attach_disk_cache()
+        print(f"[bench] disk compile cache: {disk.dir}")
     t0 = time.time()
     results = {}
+    sections = {}
+
+    def section(name, fn):
+        s0 = time.time()
+        out = fn()
+        sections[name] = round(time.time() - s0, 2)
+        return out
 
     if args.only in (None, "cascade"):
         from benchmarks import cascade_tables
-        results.update(cascade_tables.run_all(fast=args.fast))
+        results.update(section("cascade", lambda: cascade_tables.run_all(
+            fast=args.fast, backend=args.backend, workers=args.workers)))
 
     if args.only in (None, "lm"):
         from benchmarks import lm_lowering
-        results["lm_lowering"] = lm_lowering.run_all(fast=args.fast)
+        results["lm_lowering"] = section("lm", lambda: lm_lowering.run_all(
+            fast=args.fast, backend=args.backend, workers=args.workers))
 
     if args.only in (None, "pipeline"):
         from benchmarks import pipeline_partition
-        results["pipeline"] = pipeline_partition.run_all()
+        results["pipeline"] = section("pipeline",
+                                      pipeline_partition.run_all)
 
     if args.only in (None, "ablations"):
         from benchmarks import ablations
-        results["ablations"] = ablations.run_all(fast=args.fast)
+        results["ablations"] = section("ablations", lambda: ablations.run_all(
+            fast=args.fast, backend=args.backend, workers=args.workers))
 
     if args.only in (None, "roofline"):
         from benchmarks import roofline
-        results["roofline"] = roofline.run_all()
+        results["roofline"] = section("roofline", roofline.run_all)
 
     # ----- headline band checks (paper abstract) -------------------------
     if "dense_table" in results:
@@ -74,7 +114,22 @@ def main() -> None:
             print(f"  {'STA err above 500 MHz':34s} paper ~13%     "
                   f"ours {sa[0]['err_pct']}%")
 
-    print(f"\n[benchmarks] total {time.time() - t0:.1f}s")
+    total = time.time() - t0
+    print(f"\n[benchmarks] total {total:.1f}s")
+
+    from benchmarks._util import append_bench_record
+    append_bench_record(args.bench_out, {
+        "fast": args.fast,
+        "only": args.only,
+        "backend": args.backend,
+        "workers": args.workers or worker_count(),
+        "disk_cache": not args.no_disk_cache,
+        "cpu_count": os.cpu_count(),
+        "python": sys.version.split()[0],
+        "total_seconds": round(total, 2),
+        "sections": sections,
+        "cache": DEFAULT_CACHE.stats(),
+    })
 
 
 if __name__ == "__main__":

@@ -11,10 +11,13 @@ from .apps import ALL_APPS, DENSE_APPS, SPARSE_APPS, AppSpec
 from .branch_delay import (arrival_cycles_dfg, check_matched_dfg,
                            check_matched_netlist, match_dfg, match_netlist)
 from .broadcast import broadcast_pipelining
-from .cache import (DEFAULT_CACHE, CompileCache, app_fingerprint, compile_key,
+from .cache import (DEFAULT_CACHE, CompileCache, DiskCache, app_fingerprint,
+                    attach_disk_cache, code_fingerprint, compile_key,
                     dfg_fingerprint)
-from .compiler import (CascadeCompiler, CompileResult, PassConfig,
-                       compile_batch)
+from .compiler import (BATCH_BACKENDS, CascadeCompiler, CompileResult,
+                       PassConfig, compile_batch)
+from .config import (cache_dir, disk_cache_enabled, env_flag, place_debug,
+                     worker_count)
 from .dfg import DFG
 from .flush import add_soft_flush, remove_flush
 from .interconnect import Fabric, Hop, Tile
@@ -35,8 +38,11 @@ from .unroll import max_copies, subfabric_for
 __all__ = [
     "ALL_APPS", "DENSE_APPS", "SPARSE_APPS", "AppSpec",
     "CascadeCompiler", "CompileResult", "PassConfig", "compile_batch",
-    "CompileCache", "DEFAULT_CACHE", "compile_key", "app_fingerprint",
-    "dfg_fingerprint",
+    "BATCH_BACKENDS",
+    "CompileCache", "DiskCache", "DEFAULT_CACHE", "attach_disk_cache",
+    "compile_key", "app_fingerprint", "dfg_fingerprint", "code_fingerprint",
+    "cache_dir", "disk_cache_enabled", "env_flag", "place_debug",
+    "worker_count",
     "CompileContext", "Pass", "PassPipeline", "PASS_REGISTRY",
     "DEFAULT_SCHEDULE", "register_pass", "find_reg_chains",
     "DFG", "Fabric", "Hop", "Tile", "Netlist", "RoutedDesign",

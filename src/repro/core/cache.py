@@ -12,19 +12,36 @@ SHA-256 fingerprint of everything that influences the output:
 * the fabric geometry, the timing-model entries, the energy parameters;
 * the unroll override and the verify flag.
 
-Thread-safe (``compile_batch`` shares one cache across workers), bounded
-LRU, with hit/miss counters exposed via :meth:`CompileCache.stats`.
+Two tiers:
+
+* :class:`CompileCache` — thread-safe in-memory bounded LRU (``compile_batch``
+  shares one across workers), with hit/miss counters via ``stats()``.
+* :class:`DiskCache` — optional cross-*process* tier under
+  ``repro.core.config.cache_dir()`` (``CASCADE_CACHE_DIR``), so CI jobs and
+  repeat benchmark invocations skip recompiles entirely.  Entries are
+  pickles written atomically under a namespace that combines a schema
+  version with a digest of the ``repro.core`` sources, so neither a format
+  change nor a compiler-code change can ever serve a stale result.  Total
+  size is bounded; the oldest entries (by mtime, refreshed on hit) are
+  evicted first.
 """
 
 from __future__ import annotations
 
 import hashlib
+import os
+import pickle
+import shutil
+import tempfile
 import threading
+import time
 from collections import OrderedDict
 from dataclasses import asdict, fields as dc_fields
+from pathlib import Path
 from typing import Any, Dict, Optional
 
 from .apps import AppSpec
+from .config import cache_dir as _default_cache_root, disk_cache_enabled
 from .dfg import DFG
 from .interconnect import Fabric
 from .power import EnergyParams
@@ -79,11 +96,200 @@ def compile_key(app: AppSpec, config: Any, fabric: Fabric,
     return h.hexdigest()
 
 
-class CompileCache:
-    """Bounded, thread-safe LRU cache of :class:`CompileResult` objects."""
+# ---------------------------------------------------------------------------
+# disk tier
+# ---------------------------------------------------------------------------
 
-    def __init__(self, maxsize: int = 256):
+#: Bump when the on-disk entry format changes; old namespaces are ignored.
+DISK_SCHEMA_VERSION = 1
+
+_code_fp: Optional[str] = None
+
+
+def code_fingerprint() -> str:
+    """Digest of the ``repro.core`` sources (computed once per process).
+
+    Namespaces the disk cache: compile keys hash *inputs* (app content,
+    config, fabric, timing), not the compiler itself, so an edit to any pass
+    would otherwise happily serve results from the previous code.
+    """
+    global _code_fp
+    if _code_fp is None:
+        h = hashlib.sha256()
+        root = Path(__file__).resolve().parent
+        for f in sorted(root.glob("*.py")):
+            h.update(f.name.encode())
+            h.update(f.read_bytes())
+        _code_fp = h.hexdigest()
+    return _code_fp
+
+
+class DiskCache:
+    """Cross-process compile-result cache (pickled entries, atomic writes).
+
+    Layout: ``<root>/v<schema>-<code fingerprint>/<key>.pkl``.  Writes go to
+    a temp file in the same directory and ``os.replace`` in, so concurrent
+    processes (CI shards, parallel benchmarks) never observe a torn entry;
+    a corrupt or unreadable entry is treated as a miss and deleted.  After
+    each put the namespace is trimmed to ``max_bytes`` oldest-first (hits
+    refresh mtime, making eviction LRU-ish).
+    """
+
+    def __init__(self, root: Optional[os.PathLike] = None,
+                 max_bytes: int = 256 * 1024 * 1024,
+                 schema: int = DISK_SCHEMA_VERSION,
+                 namespace: Optional[str] = None):
+        base = Path(root) if root is not None else _default_cache_root()
+        self.dir = base / f"v{schema}-{(namespace or code_fingerprint())[:12]}"
+        if namespace is None:
+            # a code edit moves the live namespace; reap the abandoned ones
+            # so the size bound holds for the whole cache root, not just
+            # the current namespace.  (Explicit namespaces opt out: tests
+            # and tools may keep several alive side by side.)
+            for stale in base.glob("v*-*"):
+                if stale.is_dir() and stale != self.dir:
+                    shutil.rmtree(stale, ignore_errors=True)
+        self.max_bytes = max_bytes
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.puts = 0
+        self.put_errors = 0
+        self.evictions = 0
+        self.dir.mkdir(parents=True, exist_ok=True)
+
+    def _path(self, key: str) -> Path:
+        return self.dir / f"{key}.pkl"
+
+    def __len__(self) -> int:
+        return sum(1 for _ in self.dir.glob("*.pkl"))
+
+    def get(self, key: str) -> Optional[Any]:
+        p = self._path(key)
+        try:
+            with open(p, "rb") as f:
+                value = pickle.load(f)
+        except FileNotFoundError:
+            with self._lock:
+                self.misses += 1
+            return None
+        except Exception:
+            with self._lock:
+                self.misses += 1
+            try:
+                p.unlink()
+            except OSError:
+                pass
+            return None
+        with self._lock:
+            self.hits += 1
+        try:
+            os.utime(p)                      # refresh mtime: LRU-ish eviction
+        except OSError:
+            pass
+        return value
+
+    def put(self, key: str, value: Any) -> None:
+        try:
+            blob = pickle.dumps(value)
+        except Exception:
+            with self._lock:
+                self.put_errors += 1         # unpicklable result: skip tier
+            return
+        tmp = None
+        try:
+            fd, tmp = tempfile.mkstemp(dir=self.dir, suffix=".tmp")
+            with os.fdopen(fd, "wb") as f:
+                f.write(blob)
+            os.replace(tmp, self._path(key))
+        except OSError:
+            if tmp is not None:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+            with self._lock:
+                self.put_errors += 1
+            return
+        with self._lock:
+            self.puts += 1
+        self._enforce_limit()
+
+    def _enforce_limit(self) -> None:
+        now = time.time()
+        for orphan in self.dir.glob("*.tmp"):
+            # a killed process can strand its temp file mid-put; anything
+            # older than a minute is certainly not an in-flight write
+            try:
+                if now - orphan.stat().st_mtime > 60:
+                    orphan.unlink()
+            except OSError:
+                pass
+        try:
+            entries = []
+            for p in self.dir.glob("*.pkl"):
+                st = p.stat()
+                entries.append((st.st_mtime, st.st_size, p))
+        except OSError:
+            return
+        total = sum(size for _, size, _ in entries)
+        if total <= self.max_bytes:
+            return
+        for _, size, p in sorted(entries):
+            try:
+                p.unlink()
+            except OSError:
+                continue
+            with self._lock:
+                self.evictions += 1
+            total -= size
+            if total <= self.max_bytes:
+                break
+
+    def size_bytes(self) -> int:
+        try:
+            return sum(p.stat().st_size for p in self.dir.glob("*.pkl"))
+        except OSError:
+            return 0
+
+    def clear(self) -> None:
+        for p in self.dir.glob("*.pkl"):
+            try:
+                p.unlink()
+            except OSError:
+                pass
+        with self._lock:
+            self.hits = self.misses = self.puts = 0
+            self.put_errors = self.evictions = 0
+
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            total = self.hits + self.misses
+            return {"hits": self.hits, "misses": self.misses,
+                    "puts": self.puts, "put_errors": self.put_errors,
+                    "evictions": self.evictions, "entries": len(self),
+                    "size_bytes": self.size_bytes(),
+                    "hit_rate": round(self.hits / total, 3) if total else 0.0,
+                    "dir": str(self.dir)}
+
+
+# ---------------------------------------------------------------------------
+# memory tier (optionally backed by a DiskCache)
+# ---------------------------------------------------------------------------
+
+
+class CompileCache:
+    """Bounded, thread-safe LRU cache of :class:`CompileResult` objects.
+
+    With a ``disk`` tier attached, a memory miss falls through to disk and
+    a disk hit is promoted back into memory; puts write both tiers.  The
+    ``hits``/``misses`` counters track the memory tier only — per-tier
+    rates live in ``stats()`` (the disk tier under ``"disk"``).
+    """
+
+    def __init__(self, maxsize: int = 256, disk: Optional[DiskCache] = None):
         self.maxsize = maxsize
+        self.disk = disk
         self._data: "OrderedDict[str, Any]" = OrderedDict()
         self._lock = threading.Lock()
         self.hits = 0
@@ -100,9 +306,14 @@ class CompileCache:
                 self.hits += 1
                 return self._data[key]
             self.misses += 1
-            return None
+        if self.disk is not None:
+            value = self.disk.get(key)
+            if value is not None:
+                self._put_memory(key, value)     # promote
+                return value
+        return None
 
-    def put(self, key: str, value: Any) -> None:
+    def _put_memory(self, key: str, value: Any) -> None:
         with self._lock:
             self._data[key] = value
             self._data.move_to_end(key)
@@ -110,17 +321,25 @@ class CompileCache:
                 self._data.popitem(last=False)
                 self.evictions += 1
 
+    def put(self, key: str, value: Any) -> None:
+        self._put_memory(key, value)
+        if self.disk is not None:
+            self.disk.put(key, value)
+
     def clear(self) -> None:
         with self._lock:
             self._data.clear()
             self.hits = self.misses = self.evictions = 0
 
-    def stats(self) -> Dict[str, int]:
+    def stats(self) -> Dict[str, Any]:
         with self._lock:
             total = self.hits + self.misses
-            return {"hits": self.hits, "misses": self.misses,
-                    "evictions": self.evictions, "entries": len(self._data),
-                    "hit_rate": round(self.hits / total, 3) if total else 0.0}
+            out = {"hits": self.hits, "misses": self.misses,
+                   "evictions": self.evictions, "entries": len(self._data),
+                   "hit_rate": round(self.hits / total, 3) if total else 0.0}
+        if self.disk is not None:
+            out["disk"] = self.disk.stats()
+        return out
 
 
 #: Process-wide default cache.  Compilers created without an explicit cache
@@ -128,3 +347,19 @@ class CompileCache:
 #: other's compiles (keys are full content hashes, so sharing is safe across
 #: fabrics/timings/configs).  Pass ``cache=CompileCache()`` for isolation.
 DEFAULT_CACHE = CompileCache(maxsize=512)
+
+
+def attach_disk_cache(cache: Optional[CompileCache] = None,
+                      **disk_kwargs) -> DiskCache:
+    """Attach (idempotently) a :class:`DiskCache` tier to ``cache``
+    (``DEFAULT_CACHE`` when omitted) and return it.  Benchmark drivers call
+    this so repeat *processes* skip recompiles; ``CASCADE_DISK_CACHE=1``
+    does the same at import for every consumer of the default cache."""
+    c = DEFAULT_CACHE if cache is None else cache
+    if c.disk is None:
+        c.disk = DiskCache(**disk_kwargs)
+    return c.disk
+
+
+if disk_cache_enabled():
+    attach_disk_cache()

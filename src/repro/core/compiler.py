@@ -12,20 +12,25 @@ The flow itself lives in :mod:`repro.core.passes` as a staged pass pipeline;
 ``compile()`` is a thin driver that builds a :class:`CompileContext`, runs the
 schedule declared by the config, and memoizes results in a content-hash
 :class:`~repro.core.cache.CompileCache`.  ``compile_batch()`` compiles many
-(app, config) pairs concurrently, deduplicating identical jobs through the
-cache.
+(app, config) pairs concurrently — across *processes* by default when more
+than one job misses the cache, since the SA place/route inner loop is pure
+Python and GIL-bound — deduplicating identical jobs through the cache.
 """
 
 from __future__ import annotations
 
 import copy
+import multiprocessing
+import pickle
+import sys
 import time
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
 from dataclasses import dataclass, field, replace as dc_replace
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 from .apps import AppSpec
 from .cache import DEFAULT_CACHE, CompileCache, compile_key
+from .config import worker_count
 from .interconnect import Fabric
 from .netlist import RoutedDesign
 from .passes import CompileContext, PassPipeline
@@ -93,23 +98,78 @@ class CompileResult:
 CompileJob = Union[Tuple[AppSpec, Optional[PassConfig]],
                    Tuple[AppSpec, Optional[PassConfig], Optional[int]]]
 
+#: ``compile_batch`` backends.  "auto" picks "process" when more than one
+#: job misses every cache tier (the only case where multi-core pays for the
+#: fork/pickle overhead), else "thread".
+BATCH_BACKENDS = ("auto", "thread", "process")
+
+
+def _process_context():
+    """Start method for the process backend.
+
+    ``fork`` is cheap, but forking a process with live threads risks
+    deadlocking the child on a lock held at fork time — so it is used only
+    on Linux (macOS frameworks start threads at import, which is why
+    CPython switched its default there) and only before a multithreaded
+    runtime (jax) is loaded; otherwise fall back to ``spawn`` (fresh
+    interpreter, slower startup).  The benchmark drivers never import jax,
+    so they keep the fast path.
+    """
+    if sys.platform == "linux" and "jax" not in sys.modules:
+        return multiprocessing.get_context("fork")
+    return multiprocessing.get_context("spawn")
+
+
+def _compile_job_in_worker(app: AppSpec, cfg: "PassConfig",
+                           unroll: Optional[int], verify: bool,
+                           fabric: Fabric, timing: TimingModel,
+                           energy: EnergyParams) -> bytes:
+    """One compile inside a worker process; returns the pickled result.
+
+    The worker never touches a cache (the parent established the miss and
+    merges the returned result into its own tiers), so per-worker state
+    reduces to the deterministic compile itself — which is what makes the
+    process backend byte-identical to serial compiles.  Returning the
+    pickle (rather than the object) lets the parent materialize the cache
+    entry and the caller's result as two independent objects for the cost
+    of two cheap loads instead of an expensive deep copy.
+    """
+    compiler = CascadeCompiler(fabric=fabric, timing=timing, energy=energy,
+                               cache=CompileCache(maxsize=1))
+    result = compiler.compile(app, cfg, unroll=unroll, verify=verify,
+                              use_cache=False)
+    return pickle.dumps(result)
+
 
 class CascadeCompiler:
     def __init__(self, fabric: Optional[Fabric] = None,
                  timing: Optional[TimingModel] = None,
                  energy: Optional[EnergyParams] = None,
-                 cache: Optional[CompileCache] = None):
+                 cache: Optional[CompileCache] = None,
+                 batch_backend: str = "auto",
+                 batch_workers: Optional[int] = None):
+        if batch_backend not in BATCH_BACKENDS:
+            raise ValueError(f"batch_backend must be one of {BATCH_BACKENDS},"
+                             f" got {batch_backend!r}")
         self.fabric = fabric or Fabric()
         self.timing = timing or generate_timing_model(self.fabric)
         self.energy = energy or EnergyParams()
         self.cache = DEFAULT_CACHE if cache is None else cache
+        #: Defaults for ``compile_batch`` (drivers set these once instead of
+        #: threading backend/worker args through every table function).
+        self.batch_backend = batch_backend
+        self.batch_workers = batch_workers
+        #: Stats of the most recent ``compile_batch`` call (backend, worker
+        #: count, hit/compile split) — benchmark drivers report these.
+        self.last_batch: Dict[str, object] = {}
 
     # -- single compile ----------------------------------------------------
     def compile(self, app: AppSpec, config: Optional[PassConfig] = None,
                 unroll: Optional[int] = None, verify: bool = False,
                 use_cache: bool = True,
                 pipeline: Optional[PassPipeline] = None,
-                _key: Optional[str] = None) -> CompileResult:
+                _key: Optional[str] = None,
+                _skip_lookup: bool = False) -> CompileResult:
         """Run the pass pipeline for one (app, config) pair.
 
         With ``use_cache`` (default), deterministic repeats return the
@@ -117,7 +177,9 @@ class CascadeCompiler:
         pass ``pipeline`` to override the schedule declared by the config.
         The cache stores and serves deep copies, so callers may freely
         mutate what they get back.  ``_key`` lets ``compile_batch`` reuse a
-        content hash it already computed.
+        content hash it already computed; ``_skip_lookup`` skips the cache
+        probe (the batch driver already probed) while still storing the
+        result.
         """
         cfg = config or PassConfig()
         t0 = time.time()
@@ -126,10 +188,11 @@ class CascadeCompiler:
             key = _key or compile_key(app, cfg, self.fabric, self.timing,
                                       self.energy, unroll=unroll,
                                       verify=verify)
-            hit = self.cache.get(key)
-            if hit is not None:
-                return dc_replace(copy.deepcopy(hit), cache_hit=True,
-                                  compile_seconds=time.time() - t0)
+            if not _skip_lookup:
+                hit = self.cache.get(key)
+                if hit is not None:
+                    return dc_replace(copy.deepcopy(hit), cache_hit=True,
+                                      compile_seconds=time.time() - t0)
         ctx = CompileContext(app=app, config=cfg, fabric=self.fabric,
                              timing=self.timing, energy=self.energy,
                              unroll=unroll, verify=verify)
@@ -149,51 +212,150 @@ class CascadeCompiler:
     def compile_batch(self, jobs: Iterable[CompileJob],
                       max_workers: Optional[int] = None,
                       verify: bool = False,
-                      use_cache: bool = True) -> List[CompileResult]:
+                      use_cache: bool = True,
+                      backend: Optional[str] = None) -> List[CompileResult]:
         """Compile many (app, config[, unroll]) jobs through a worker pool.
 
-        Results come back in job order and are bit-identical to serial
-        ``compile()`` calls (the flow is seeded and deterministic).  Jobs
-        with identical content hashes are compiled once; repeat invocations
-        are served from the cache.  Those two effects are where the speedup
-        comes from: the SA placement inner loop is pure Python, so the
-        thread pool itself adds little parallelism (a process-pool backend
-        is the roadmap item for that).
+        Results come back in job order and are byte-identical to serial
+        ``compile()`` calls (the flow is seeded and deterministic); every
+        returned result is a private object — mutating one can never
+        corrupt another, even for deduplicated duplicate jobs.
+
+        Backends:
+
+        * ``"thread"`` — in-process pool.  The SA place/route inner loop is
+          pure Python and holds the GIL, so threads only overlap cache
+          lookups and numpy sections.
+        * ``"process"`` — ``ProcessPoolExecutor``: each cache miss compiles
+          in a worker process (true multi-core PnR) and the parent merges
+          the result back into its cache tiers.  Jobs whose specs don't
+          pickle fall back to the thread path transparently.
+        * ``"auto"`` (default) — ``"process"`` when more than one job
+          misses every cache tier, else ``"thread"``.
+
+        Duplicate jobs (identical content hashes) compile once; repeat
+        invocations are served from the cache (memory, then disk tier when
+        attached).  ``backend``/``max_workers`` default to the compiler's
+        ``batch_backend``/``batch_workers``; ``self.last_batch`` records
+        backend, worker count, and the hit/compile split for benchmark
+        reporting.
         """
+        backend = backend or self.batch_backend
+        if backend not in BATCH_BACKENDS:
+            raise ValueError(f"backend must be one of {BATCH_BACKENDS}, "
+                             f"got {backend!r}")
         norm: List[Tuple[AppSpec, PassConfig, Optional[int]]] = []
         for job in jobs:
             app, cfg = job[0], job[1] or PassConfig()
             unroll = job[2] if len(job) > 2 else None
             norm.append((app, cfg, unroll))
         if not norm:
+            self.last_batch = {"jobs": 0, "backend": backend}
             return []
+        t0 = time.time()
 
-        keys: List[Optional[str]] = []
-        for app, cfg, unroll in norm:
-            keys.append(compile_key(app, cfg, self.fabric, self.timing,
-                                    self.energy, unroll=unroll, verify=verify)
-                        if (use_cache and self.cache is not None) else None)
+        caching = use_cache and self.cache is not None
+        keys: List[Optional[str]] = [
+            compile_key(app, cfg, self.fabric, self.timing, self.energy,
+                        unroll=unroll, verify=verify) if caching else None
+            for app, cfg, unroll in norm]
 
-        futures: Dict[int, "object"] = {}
+        # dedup identical jobs: one owner index per distinct content hash
+        owner_of: List[int] = []
         first_for_key: Dict[str, int] = {}
-        workers = max_workers or min(8, len(norm))
-        with ThreadPoolExecutor(max_workers=workers) as ex:
-            for i, (app, cfg, unroll) in enumerate(norm):
-                k = keys[i]
-                if k is not None and k in first_for_key:
-                    continue                      # duplicate job: share result
+        for i, k in enumerate(keys):
+            if k is not None and k in first_for_key:
+                owner_of.append(first_for_key[k])
+            else:
                 if k is not None:
                     first_for_key[k] = i
-                futures[i] = ex.submit(self.compile, app, cfg, unroll=unroll,
-                                       verify=verify, use_cache=use_cache,
-                                       _key=k)
-            out: List[CompileResult] = []
-            for i, k in enumerate(keys):
-                owner = first_for_key.get(k, i) if k is not None else i
-                r = futures[owner].result()
-                if owner != i:               # duplicate job: private copy
-                    r = dc_replace(copy.deepcopy(r), cache_hit=True)
-                out.append(r)
+                owner_of.append(i)
+        owners = [i for i in range(len(norm)) if owner_of[i] == i]
+
+        # probe the cache tiers up front so the backend decision (and the
+        # worker pool size) reflect only true misses
+        results: Dict[int, CompileResult] = {}
+        for i in owners:
+            if keys[i] is None:
+                continue
+            hit = self.cache.get(keys[i])
+            if hit is not None:
+                results[i] = dc_replace(copy.deepcopy(hit), cache_hit=True,
+                                        compile_seconds=0.0)
+        cache_hits = len(results)
+        misses = [i for i in owners if i not in results]
+
+        workers = max_workers or self.batch_workers or worker_count(len(norm))
+        chosen = backend
+        if chosen == "auto":
+            chosen = "process" if len(misses) > 1 else "thread"
+
+        proc: List[int] = []
+        threaded: List[int] = list(misses)
+        inline_fallback = 0
+        if chosen == "process" and misses:
+            try:
+                pickle.dumps((self.fabric, self.timing, self.energy))
+                env_picklable = True
+            except Exception:
+                env_picklable = False     # whole worker payload must cross
+            proc, threaded = [], []
+            for i in misses:
+                try:
+                    if not env_picklable:
+                        raise TypeError("compiler env not picklable")
+                    pickle.dumps(norm[i])
+                    proc.append(i)
+                except Exception:
+                    threaded.append(i)    # unpicklable spec: thread path
+            inline_fallback = len(threaded)
+        # launch the thread-path jobs first so inline fallbacks overlap the
+        # process workers instead of waiting for them to drain
+        tex = (ThreadPoolExecutor(max_workers=min(workers, len(threaded)))
+               if threaded else None)
+        tfuts = {i: tex.submit(self.compile, norm[i][0], norm[i][1],
+                               unroll=norm[i][2], verify=verify,
+                               use_cache=use_cache, _key=keys[i],
+                               _skip_lookup=True)
+                 for i in threaded}
+        try:
+            if proc:
+                with ProcessPoolExecutor(
+                        max_workers=min(workers, len(proc)),
+                        mp_context=_process_context()) as ex:
+                    futs = {i: ex.submit(_compile_job_in_worker,
+                                         norm[i][0], norm[i][1], norm[i][2],
+                                         verify, self.fabric, self.timing,
+                                         self.energy)
+                            for i in proc}
+                    for i, fut in futs.items():
+                        blob = fut.result()
+                        if keys[i] is not None:
+                            # merge the worker's result into the parent's
+                            # cache tiers (the worker itself is cache-less)
+                            self.cache.put(keys[i], pickle.loads(blob))
+                        results[i] = pickle.loads(blob)
+            for i, fut in tfuts.items():
+                results[i] = fut.result()
+        finally:
+            if tex is not None:
+                tex.shutdown(wait=True)
+
+        out: List[CompileResult] = []
+        for i in range(len(norm)):
+            owner = owner_of[i]
+            r = results[owner]
+            if owner != i:               # duplicate job: private copy
+                r = dc_replace(copy.deepcopy(r), cache_hit=True)
+            out.append(r)
+        self.last_batch = {
+            "jobs": len(norm), "unique": len(owners),
+            "backend": chosen, "workers": workers,
+            "cache_hits": cache_hits,
+            "compiled": len(owners) - cache_hits,
+            "inline_fallback": inline_fallback,
+            "wall_seconds": round(time.time() - t0, 3),
+        }
         return out
 
 

@@ -1,0 +1,66 @@
+"""Environment configuration — the single place Cascade env vars are read.
+
+Benchmarks, tests, and examples all need the same few knobs (where the disk
+compile cache lives, how many batch workers to use, debug assertions in the
+annealer); hand-rolling ``os.environ`` reads in each driver drifts.  Every
+knob lives here and is re-exported from :mod:`repro.core`:
+
+    CASCADE_CACHE_DIR    root of the disk compile cache
+                         (default ``~/.cache/cascade-repro``)
+    CASCADE_WORKERS      worker count for ``compile_batch`` and the
+                         benchmark drivers (default: min(8, cpu count),
+                         clamped to the job count)
+    CASCADE_DISK_CACHE   truthy -> attach the disk tier to the process-wide
+                         ``DEFAULT_CACHE`` at import (benchmarks attach it
+                         explicitly regardless)
+    CASCADE_PLACE_DEBUG  truthy -> the SA placer re-derives the full cost
+                         at every temperature step and asserts the
+                         incremental bookkeeping agrees
+"""
+
+from __future__ import annotations
+
+import os
+from pathlib import Path
+from typing import Optional
+
+_FALSY = ("", "0", "false", "no", "off")
+
+
+def env_flag(name: str, default: bool = False) -> bool:
+    """Boolean env var: unset -> ``default``; "0"/"false"/"no"/"off" -> False."""
+    v = os.environ.get(name)
+    if v is None:
+        return default
+    return v.strip().lower() not in _FALSY
+
+
+def cache_dir() -> Path:
+    """Disk-cache root: ``CASCADE_CACHE_DIR`` or ``~/.cache/cascade-repro``."""
+    root = os.environ.get("CASCADE_CACHE_DIR")
+    if root:
+        return Path(root).expanduser()
+    return Path.home() / ".cache" / "cascade-repro"
+
+
+def worker_count(jobs: Optional[int] = None, cap: int = 8) -> int:
+    """Batch worker count: ``CASCADE_WORKERS`` wins; otherwise min(cap, cpu
+    count), never more than ``jobs`` when given, always at least 1."""
+    env = os.environ.get("CASCADE_WORKERS")
+    if env:
+        try:
+            return max(1, int(env))
+        except ValueError:
+            pass
+    w = min(cap, os.cpu_count() or cap)
+    if jobs is not None:
+        w = min(w, jobs)
+    return max(1, w)
+
+
+def disk_cache_enabled(default: bool = False) -> bool:
+    return env_flag("CASCADE_DISK_CACHE", default)
+
+
+def place_debug(default: bool = False) -> bool:
+    return env_flag("CASCADE_PLACE_DEBUG", default)

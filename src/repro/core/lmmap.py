@@ -25,6 +25,7 @@ fully-pipelined CP/EDP per assigned architecture.
 from __future__ import annotations
 
 import math
+from dataclasses import dataclass
 from typing import List
 
 from .apps import AppSpec
@@ -141,6 +142,29 @@ def _moe_tile(copy: int, g: DFG, experts: int, taps: int):
 # ---------------------------------------------------------------------------
 
 
+@dataclass(frozen=True)
+class _BlockTileBuilder:
+    """Picklable builder for ``lower_block`` app specs.
+
+    ``compile_batch(backend="process")`` ships job specs to worker
+    processes, so the builder must serialize — a closure over ``cfg``
+    wouldn't.  All lowering parameters are captured as plain fields.
+    """
+    family: str
+    taps: int
+    experts: int = 0
+
+    def __call__(self, copy: int, g: DFG, width: int) -> None:
+        if self.family in ("ssm", "hybrid"):
+            # 4 state lanes/copy: 5 input streams per lane is IO-bound on
+            # the 64-IO-tile Amber fabric
+            _ssm_tile(copy, g, max(2, self.taps // 2))
+        elif self.family == "moe":
+            _moe_tile(copy, g, experts=self.experts, taps=self.taps)
+        else:
+            _attention_tile(copy, g, self.taps)
+
+
 def lower_block(cfg, taps: int = 8, unroll: int = 2) -> AppSpec:
     """AppSpec for one tile of `cfg`'s block compute on the Amber CGRA.
 
@@ -149,17 +173,9 @@ def lower_block(cfg, taps: int = 8, unroll: int = 2) -> AppSpec:
     """
     fam = cfg.family
     work = (4096, max(1, cfg.d_model // taps))
-    if fam in ("ssm", "hybrid"):
-        def build(c, g, width):
-            # 4 state lanes/copy: 5 input streams per lane is IO-bound on
-            # the 64-IO-tile Amber fabric
-            _ssm_tile(c, g, max(2, taps // 2))
-        return AppSpec(f"lm_{cfg.name}", build, frame=work, unroll=unroll)
     if fam == "moe":
-        def build(c, g, width):
-            _moe_tile(c, g, experts=min(8, cfg.num_experts), taps=taps)
+        build = _BlockTileBuilder(fam, taps, experts=min(8, cfg.num_experts))
         return AppSpec(f"lm_{cfg.name}", build, sparse=True,
                        work_tokens=work[0] * work[1] // 64)
-    def build(c, g, width):
-        _attention_tile(c, g, taps)
-    return AppSpec(f"lm_{cfg.name}", build, frame=work, unroll=unroll)
+    return AppSpec(f"lm_{cfg.name}", _BlockTileBuilder(fam, taps),
+                   frame=work, unroll=unroll)

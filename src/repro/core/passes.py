@@ -248,14 +248,16 @@ def _pnr(ctx: CompileContext):
           if fabric is not ctx.fabric else ctx.timing)
     pp = PlaceParams(alpha=cfg.placement_alpha, gamma=cfg.placement_gamma,
                      seed=cfg.seed, moves_per_node=cfg.place_moves)
-    placement = place(nl, fabric, pp)
+    place_stats: dict = {}
+    placement = place(nl, fabric, pp, stats=place_stats)
     design = route(nl, placement, fabric)
     design.unroll_copies = ctx.copies
     design.source_dfg = ctx.source_dfg
     ctx.netlist, ctx.place_fabric, ctx.place_timing = nl, fabric, tm
     ctx.placement, ctx.design = placement, design
     return {"fabric": fabric.name, "copies": ctx.copies,
-            "nodes": len(nl.nodes), "branches": len(nl.branches)}
+            "nodes": len(nl.nodes), "branches": len(nl.branches),
+            "place": place_stats}
 
 
 @register_pass("post_pnr", stats_key="post_pnr",
