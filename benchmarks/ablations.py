@@ -1,11 +1,14 @@
-"""Paper-adjacent ablations: the two Cascade hyperparameters with a
-quality/resource trade-off.
+"""Paper-adjacent ablations: the Cascade hyperparameters with a
+quality/resource trade-off, plus the beyond-paper power-cap sweep.
 
 * placement alpha (Eq. 1 criticality exponent) sweep — Section V-C
 * post-PnR register budget sweep — Section V-D ("number of registers added
   vs critical path" trade-off the paper describes for broadcast/post-PnR)
+* power-cap sweep — the Capstone-style ``"power_capped"`` schedule at a
+  ladder of power budgets (fractions of the uncapped power), tabulating
+  the Pareto point each cap reaches: cap -> freq / power / EDP / registers
 
-Both sweeps batch-compile their whole config grid concurrently through
+All sweeps batch-compile their whole config grid concurrently through
 ``compile_batch`` (the points are independent).
 """
 
@@ -24,6 +27,8 @@ ALPHAS = (1.0, 1.3, 1.6, 2.0, 2.5)
 FAST_ALPHAS = (1.0, 1.6, 2.5)
 BUDGETS = (0, 8, 32, 128, 512)
 FAST_BUDGETS = (0, 32, 512)
+CAP_FRACTIONS = (0.75, 0.85, 0.95, 1.0)
+FAST_CAP_FRACTIONS = (0.85, 1.0)
 
 
 def alpha_sweep(app: str = "harris", compiler: Optional[CascadeCompiler] = None,
@@ -62,6 +67,46 @@ def budget_sweep(app: str = "unsharp",
     return rows
 
 
+def cap_sweep(app: str = "unsharp",
+              compiler: Optional[CascadeCompiler] = None,
+              moves: int = MOVES,
+              fractions: Sequence[float] = CAP_FRACTIONS) -> List[Dict]:
+    """Power-cap ladder: compile the app uncapped to find its natural power,
+    then re-compile under caps at ``fractions`` of it.  Each row is the
+    Pareto point the controller reached — by construction the reported
+    power never exceeds the cap."""
+    c = compiler or CascadeCompiler()
+    base = c.compile_batch(
+        [(ALL_APPS[app], PassConfig.power_capped(None, place_moves=moves,
+                                                 seed=1))])[0]
+    # compile with the exact caps (rounding could push a cap below the
+    # uncapped power and stop that sweep point a round early); round only
+    # the table label
+    caps = [base.power.power_mw * f for f in fractions]
+    jobs = [(ALL_APPS[app], PassConfig.power_capped(cap, place_moves=moves,
+                                                    seed=1))
+            for cap in caps]
+
+    def row(label, r):
+        return {"app": app, "cap_mw": label,
+                "power_mw": round(r.power.power_mw, 1),
+                "freq_mhz": round(r.sta.max_freq_mhz, 1),
+                "edp_ujs": round(r.power.edp_js * 1e6, 4),
+                "regs_added": (r.power_cap.final.registers_added
+                               if r.power_cap else 0),
+                "stop": r.power_cap.stop_reason if r.power_cap else ""}
+
+    rows = [row("uncapped", base)]
+    for cap, r in zip(caps, c.compile_batch(jobs)):
+        # an infeasible cap (below even the un-pipelined design's power) is
+        # a legitimate sweep outcome: tabulate it, don't die on it
+        assert not r.power_cap.feasible or r.power.power_mw <= cap + 1e-9, \
+            f"{app}: reported {r.power.power_mw} mW exceeds cap {cap} mW"
+        rows.append(row(round(cap, 2), r))
+    print_csv(rows, "ablation: power cap (Capstone-style, beyond paper)")
+    return rows
+
+
 def run_all(fast: bool = False, backend: str = "auto",
             workers: Optional[int] = None) -> Dict[str, List[Dict]]:
     c = CascadeCompiler(batch_backend=backend, batch_workers=workers)
@@ -71,6 +116,9 @@ def run_all(fast: bool = False, backend: str = "auto",
                              alphas=FAST_ALPHAS if fast else ALPHAS),
         "budget": budget_sweep(compiler=c, moves=moves,
                                budgets=FAST_BUDGETS if fast else BUDGETS),
+        "power_cap": cap_sweep(compiler=c, moves=moves,
+                               fractions=(FAST_CAP_FRACTIONS if fast
+                                          else CAP_FRACTIONS)),
     }
     print_batch_stats(c, "ablations")
     return out

@@ -118,7 +118,7 @@ def main() -> None:
     print(f"\n[benchmarks] total {total:.1f}s")
 
     from benchmarks._util import append_bench_record
-    append_bench_record(args.bench_out, {
+    record = {
         "fast": args.fast,
         "only": args.only,
         "backend": args.backend,
@@ -129,7 +129,13 @@ def main() -> None:
         "total_seconds": round(total, 2),
         "sections": sections,
         "cache": DEFAULT_CACHE.stats(),
-    })
+    }
+    # the power-cap Pareto ladder rides along in the trajectory, so cap
+    # sweeps are comparable across runs/PRs just like wall-clock
+    cap_rows = (results.get("ablations") or {}).get("power_cap")
+    if cap_rows:
+        record["power_cap_sweep"] = cap_rows
+    append_bench_record(args.bench_out, record)
 
 
 if __name__ == "__main__":

@@ -16,18 +16,21 @@ from .cache import (DEFAULT_CACHE, CompileCache, DiskCache, app_fingerprint,
                     dfg_fingerprint)
 from .compiler import (BATCH_BACKENDS, CascadeCompiler, CompileResult,
                        PassConfig, compile_batch)
-from .config import (cache_dir, disk_cache_enabled, env_flag, place_debug,
-                     worker_count)
+from .config import (cache_dir, default_power_cap_mw, disk_cache_enabled,
+                     env_flag, env_float, place_debug, worker_count)
 from .dfg import DFG
 from .flush import add_soft_flush, remove_flush
 from .interconnect import Fabric, Hop, Tile
 from .netlist import Netlist, RoutedDesign, extract_netlist
-from .passes import (DEFAULT_SCHEDULE, PASS_REGISTRY, CompileContext, Pass,
-                     PassPipeline, register_pass)
+from .passes import (DEFAULT_SCHEDULE, NAMED_SCHEDULES, PASS_REGISTRY,
+                     POWER_CAPPED_SCHEDULE, CompileContext, Pass,
+                     PassPipeline, register_pass, resolve_schedule)
 from .pipelining import collapse_reg_chains, compute_pipelining, find_reg_chains
 from .place import PlaceParams, place, placement_stats
 from .post_pnr import PostPnRParams, post_pnr_pipeline
 from .power import EnergyParams, PowerReport, power_report
+from .power_cap import (DesignCheckpoint, ParetoPoint, PowerCapResult,
+                        evaluate_point, power_capped_pipeline)
 from .route import RouteParams, route
 from .schedule import Schedule, schedule_round2
 from .sim import equivalent, simulate, simulate_sparse, sparse_equivalent
@@ -41,10 +44,11 @@ __all__ = [
     "BATCH_BACKENDS",
     "CompileCache", "DiskCache", "DEFAULT_CACHE", "attach_disk_cache",
     "compile_key", "app_fingerprint", "dfg_fingerprint", "code_fingerprint",
-    "cache_dir", "disk_cache_enabled", "env_flag", "place_debug",
-    "worker_count",
+    "cache_dir", "default_power_cap_mw", "disk_cache_enabled", "env_flag",
+    "env_float", "place_debug", "worker_count",
     "CompileContext", "Pass", "PassPipeline", "PASS_REGISTRY",
-    "DEFAULT_SCHEDULE", "register_pass", "find_reg_chains",
+    "DEFAULT_SCHEDULE", "POWER_CAPPED_SCHEDULE", "NAMED_SCHEDULES",
+    "resolve_schedule", "register_pass", "find_reg_chains",
     "DFG", "Fabric", "Hop", "Tile", "Netlist", "RoutedDesign",
     "TimingModel", "TECH_NS", "generate_timing_model",
     "analyze", "sdf_simulate_fmax", "STAReport",
@@ -54,6 +58,8 @@ __all__ = [
     "place", "PlaceParams", "placement_stats", "route", "RouteParams",
     "extract_netlist", "Schedule", "schedule_round2",
     "EnergyParams", "PowerReport", "power_report",
+    "DesignCheckpoint", "ParetoPoint", "PowerCapResult", "evaluate_point",
+    "power_capped_pipeline",
     "add_soft_flush", "remove_flush",
     "simulate", "simulate_sparse", "equivalent", "sparse_equivalent",
     "max_copies", "subfabric_for",

@@ -36,6 +36,7 @@ from .netlist import RoutedDesign
 from .passes import CompileContext, PassPipeline
 from .post_pnr import PostPnRResult
 from .power import EnergyParams, PowerReport, power_report
+from .power_cap import PowerCapResult
 from .schedule import Schedule
 from .sta import STAReport
 from .timing_model import TimingModel, generate_timing_model
@@ -43,6 +44,15 @@ from .timing_model import TimingModel, generate_timing_model
 
 @dataclass
 class PassConfig:
+    """Declarative compile configuration — every Cascade technique toggle.
+
+    All fields participate in the compile-cache content hash
+    (:func:`repro.core.cache.compile_key` hashes ``asdict(config)``), so
+    any newly added field automatically keys cached entries; a regression
+    test enforces that two configs differing in any single field never
+    collide.
+    """
+
     compute_pipelining: bool = True
     rf_threshold: int = 4
     broadcast_pipelining: bool = True
@@ -57,7 +67,14 @@ class PassConfig:
     harden_flush: bool = True
     seed: int = 0
     place_moves: int = 400            # per node
-    schedule: Optional[Tuple[str, ...]] = None  # custom pass schedule (names)
+    #: Power budget (mW) for the ``power_capped_pipeline`` pass; ``None``
+    #: means unconstrained (byte-identical to the plain post-PnR pass).
+    power_cap_mw: Optional[float] = None
+    #: Pass schedule: ``None`` -> default flow; a named schedule string
+    #: (``"default"`` / ``"power_capped"``, see
+    #: ``repro.core.passes.NAMED_SCHEDULES``); or an explicit tuple of
+    #: registered pass names.
+    schedule: Union[str, Tuple[str, ...], None] = None
 
     @classmethod
     def unpipelined(cls, **kw) -> "PassConfig":
@@ -70,6 +87,11 @@ class PassConfig:
     def full(cls, **kw) -> "PassConfig":
         return cls(**kw)
 
+    @classmethod
+    def power_capped(cls, cap_mw: Optional[float], **kw) -> "PassConfig":
+        """The full flow with post-PnR pipelining bounded by ``cap_mw``."""
+        return cls(power_cap_mw=cap_mw, schedule="power_capped", **kw)
+
 
 @dataclass
 class CompileResult:
@@ -81,6 +103,7 @@ class CompileResult:
     power: PowerReport
     pass_stats: Dict[str, object] = field(default_factory=dict)
     post_pnr: Optional[PostPnRResult] = None
+    power_cap: Optional[PowerCapResult] = None
     compile_seconds: float = 0.0
     cache_hit: bool = False
 
@@ -201,7 +224,7 @@ class CascadeCompiler:
             app=app, config=cfg, design=ctx.design, sta=ctx.sta,
             schedule=ctx.schedule, power=ctx.power,
             pass_stats=ctx.pass_stats, post_pnr=ctx.post_pnr,
-            compile_seconds=time.time() - t0)
+            power_cap=ctx.power_cap, compile_seconds=time.time() - t0)
         if key is not None:
             # store a private deep copy: the caller's mutations (and later
             # hitters') must never reach back into the cache entry

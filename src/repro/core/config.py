@@ -16,6 +16,12 @@ knob lives here and is re-exported from :mod:`repro.core`:
     CASCADE_PLACE_DEBUG  truthy -> the SA placer re-derives the full cost
                          at every temperature step and asserts the
                          incremental bookkeeping agrees
+    CASCADE_POWER_CAP_MW default power budget (mW) for the power-capped
+                         pipelining schedule.  Read only by drivers that
+                         opt in (``examples/power_capped.py``, benchmark
+                         CLIs) and written into the ``PassConfig`` they
+                         build — never read inside the compiler itself, so
+                         the compile-cache key always reflects the cap.
 """
 
 from __future__ import annotations
@@ -56,6 +62,28 @@ def worker_count(jobs: Optional[int] = None, cap: int = 8) -> int:
     if jobs is not None:
         w = min(w, jobs)
     return max(1, w)
+
+
+def env_float(name: str, default: Optional[float] = None) -> Optional[float]:
+    """Float env var: unset, empty, or unparsable -> ``default``."""
+    v = os.environ.get(name)
+    if v is None or not v.strip():
+        return default
+    try:
+        return float(v)
+    except ValueError:
+        return default
+
+
+def default_power_cap_mw(default: Optional[float] = None) -> Optional[float]:
+    """Default power budget for the power-capped schedule
+    (``CASCADE_POWER_CAP_MW``); ``None`` means unconstrained.
+
+    Drivers that honour the knob must copy the value into the
+    ``PassConfig`` they compile with (``PassConfig.power_capped(...)``) —
+    the compiler never reads it implicitly, keeping cache keys faithful.
+    """
+    return env_float("CASCADE_POWER_CAP_MW", default)
 
 
 def disk_cache_enabled(default: bool = False) -> bool:

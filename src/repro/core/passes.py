@@ -29,6 +29,7 @@ from .pipelining import compute_pipelining
 from .place import PlaceParams, place
 from .post_pnr import PostPnRParams, PostPnRResult, post_pnr_pipeline
 from .power import EnergyParams, PowerReport, power_report
+from .power_cap import PowerCapResult, power_capped_pipeline
 from .route import route
 from .schedule import Schedule, schedule_round2
 from .sim import equivalent
@@ -70,6 +71,7 @@ class CompileContext:
     placement: Optional[dict] = None
     design: Optional[RoutedDesign] = None
     post_pnr: Optional[PostPnRResult] = None
+    power_cap: Optional[PowerCapResult] = None
     sta: Optional[STAReport] = None
     schedule: Optional[Schedule] = None
     power: Optional[PowerReport] = None
@@ -141,6 +143,37 @@ DEFAULT_SCHEDULE = (
     "verify",
 )
 
+#: The Capstone-style flow: identical to the default except the post-PnR
+#: register insertion runs under a power budget (``PassConfig.power_cap_mw``;
+#: no cap -> byte-identical results to the default schedule).
+POWER_CAPPED_SCHEDULE = tuple(
+    "power_capped_pipeline" if name == "post_pnr" else name
+    for name in DEFAULT_SCHEDULE)
+
+#: Declarative schedules by name — ``PassConfig.schedule`` may be one of
+#: these strings instead of an explicit pass-name tuple.
+NAMED_SCHEDULES: Dict[str, Sequence[str]] = {
+    "default": DEFAULT_SCHEDULE,
+    "power_capped": POWER_CAPPED_SCHEDULE,
+}
+
+
+def resolve_schedule(schedule) -> Sequence[str]:
+    """Resolve a ``PassConfig.schedule`` value to a pass-name sequence.
+
+    ``None`` means the default flow; a string names an entry of
+    :data:`NAMED_SCHEDULES`; anything else is taken as an explicit
+    sequence of pass names.
+    """
+    if schedule is None:
+        return DEFAULT_SCHEDULE
+    if isinstance(schedule, str):
+        if schedule not in NAMED_SCHEDULES:
+            raise KeyError(f"unknown named schedule {schedule!r}; "
+                           f"known: {sorted(NAMED_SCHEDULES)}")
+        return NAMED_SCHEDULES[schedule]
+    return schedule
+
 
 class PassPipeline:
     """An ordered sequence of passes with per-pass wall-time capture."""
@@ -158,8 +191,12 @@ class PassPipeline:
 
     @classmethod
     def from_config(cls, config) -> "PassPipeline":
-        """Build the schedule a ``PassConfig`` declares (or the default)."""
-        return cls(config.schedule or DEFAULT_SCHEDULE)
+        """Build the schedule a ``PassConfig`` declares (or the default).
+
+        ``config.schedule`` may be ``None``, a named schedule string
+        (:data:`NAMED_SCHEDULES`), or an explicit pass-name tuple.
+        """
+        return cls(resolve_schedule(config.schedule))
 
     @property
     def names(self) -> List[str]:
@@ -260,20 +297,54 @@ def _pnr(ctx: CompileContext):
             "place": place_stats}
 
 
+def _post_pnr_params(ctx: CompileContext) -> PostPnRParams:
+    """The inner-loop parameters shared by the plain and power-capped
+    post-PnR passes (identical params is what makes an uncapped
+    ``power_capped_pipeline`` byte-identical to ``post_pnr``)."""
+    cfg = ctx.config
+    budget = cfg.post_pnr_budget
+    if budget is None:
+        budget = ctx.place_fabric.rows * ctx.place_fabric.cols // 2
+    return PostPnRParams(max_iters=cfg.post_pnr_iters, register_budget=budget)
+
+
+def _iterations_and_stall(ctx: CompileContext):
+    """Steady-state iteration count + sparse stall factor — the workload
+    model shared by ``schedule_round2`` and the power-cap controller."""
+    iters = ctx.app.iterations_for(
+        ctx.copies if ctx.copies > 1 else ctx.unroll)
+    stall = 0.12 if ctx.app.sparse else 0.0
+    return iters, stall
+
+
 @register_pass("post_pnr", stats_key="post_pnr",
                gate=lambda ctx: ctx.config.post_pnr)
 def _post_pnr(ctx: CompileContext):
     """Post-PnR register insertion on the routed design (Section V-D)."""
     ctx.require(design=ctx.design, place_timing=ctx.place_timing)
-    cfg = ctx.config
-    budget = cfg.post_pnr_budget
-    if budget is None:
-        budget = ctx.place_fabric.rows * ctx.place_fabric.cols // 2
-    ppr = post_pnr_pipeline(ctx.design, ctx.place_timing, PostPnRParams(
-        max_iters=cfg.post_pnr_iters, register_budget=budget))
+    ppr = post_pnr_pipeline(ctx.design, ctx.place_timing,
+                            _post_pnr_params(ctx))
     ctx.post_pnr = ppr
     return {"initial_ns": ppr.initial_ns, "final_ns": ppr.final_ns,
             "registers_added": ppr.registers_added, "stop": ppr.stop_reason}
+
+
+@register_pass("power_capped_pipeline", stats_key="power_cap",
+               gate=lambda ctx: ctx.config.post_pnr)
+def _power_capped(ctx: CompileContext):
+    """Post-PnR register insertion under a power budget (beyond the paper;
+    Capstone, arXiv:2603.00909).  Drop-in replacement for ``post_pnr`` in
+    the ``"power_capped"`` named schedule: with ``power_cap_mw`` unset the
+    results are byte-identical to the unconstrained pass."""
+    ctx.require(design=ctx.design, place_timing=ctx.place_timing)
+    iters, stall = _iterations_and_stall(ctx)
+    res = power_capped_pipeline(
+        ctx.design, ctx.place_timing, ctx.energy, iters,
+        cap_mw=ctx.config.power_cap_mw, params=_post_pnr_params(ctx),
+        stall_factor=stall)
+    ctx.post_pnr = res.post_pnr
+    ctx.power_cap = res
+    return res.summary()
 
 
 @register_pass("match_check", gate=lambda ctx: not ctx.app.sparse)
@@ -296,9 +367,7 @@ def _sta(ctx: CompileContext):
 def _schedule(ctx: CompileContext):
     """Second scheduling round over the pipelined design (Section VII)."""
     ctx.require(design=ctx.design)
-    iters = ctx.app.iterations_for(
-        ctx.copies if ctx.copies > 1 else ctx.unroll)
-    stall = 0.12 if ctx.app.sparse else 0.0
+    iters, stall = _iterations_and_stall(ctx)
     ctx.schedule = schedule_round2(ctx.design, iters, stall_factor=stall)
 
 

@@ -21,12 +21,42 @@ approach infeasible for the flush broadcast, Section VI).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
 from .branch_delay import match_netlist
 from .netlist import RoutedDesign
 from .sta import STAReport, analyze
 from .timing_model import TimingModel
+
+
+@dataclass
+class DesignCheckpoint:
+    """Snapshot of everything post-PnR pipelining mutates on a routed design.
+
+    The loop only ever changes two things: which hop sites carry a
+    pipelining register (``RoutedBranch.reg_hops``) and how many registers
+    each netlist branch is annotated with (``Branch.n_regs``).  Capturing
+    those is enough to rewind a design to any earlier pipelining state —
+    placement, routing, and node structure are immutable during the loop.
+    Used for the in-loop revert here and for the power-cap rollback in
+    :mod:`repro.core.power_cap`; future schedule-space-exploration passes
+    should reuse it rather than re-listing the mutable fields.
+    """
+
+    reg_hops: Dict[Tuple, Set[int]]
+    n_regs: Dict[Tuple, int]
+
+    @classmethod
+    def capture(cls, design: RoutedDesign) -> "DesignCheckpoint":
+        return cls(
+            reg_hops={k: set(rb.reg_hops) for k, rb in design.routes.items()},
+            n_regs={b.key: b.n_regs for b in design.netlist.branches})
+
+    def restore(self, design: RoutedDesign) -> None:
+        for k, rb in design.routes.items():
+            rb.reg_hops = set(self.reg_hops[k])
+        for b in design.netlist.branches:
+            b.n_regs = self.n_regs[b.key]
 
 
 @dataclass
@@ -101,8 +131,17 @@ def _find_branch(design: RoutedDesign, driver: str, sink: str):
     return None
 
 
+#: Per-round observer: called with the design and its fresh STA report after
+#: every round that actually changed the design (reverted rounds are not
+#: reported).  Returning False stops the loop; the hook may first rewind the
+#: design to an earlier state (see ``repro.core.power_cap``), which the loop
+#: accounts for by re-analyzing before it returns.
+RoundHook = Callable[[RoutedDesign, STAReport], bool]
+
+
 def post_pnr_pipeline(design: RoutedDesign, tm: TimingModel,
-                      params: Optional[PostPnRParams] = None) -> PostPnRResult:
+                      params: Optional[PostPnRParams] = None,
+                      round_hook: Optional[RoundHook] = None) -> PostPnRResult:
     p = params or PostPnRParams()
     rep = analyze(design, tm)
     initial = rep.critical_path_ns
@@ -123,9 +162,7 @@ def post_pnr_pipeline(design: RoutedDesign, tm: TimingModel,
         total = rep.critical_path_ns - tm.sequential_overhead()
         bkey, hop_idx, _ = min(cands, key=lambda c: abs(c[2] - total / 2.0))
 
-        # snapshot for revert
-        snap_regs = {k: set(rb.reg_hops) for k, rb in design.routes.items()}
-        snap_n = {b.key: b.n_regs for b in design.netlist.branches}
+        snap = DesignCheckpoint.capture(design)    # for in-loop revert
 
         rb = design.routes[bkey]
         rb.reg_hops.add(hop_idx)
@@ -140,16 +177,27 @@ def post_pnr_pipeline(design: RoutedDesign, tm: TimingModel,
 
         if p.register_budget is not None and \
                 design.netlist.added_registers() > p.register_budget:
-            _revert(design, snap_regs, snap_n)
+            snap.restore(design)
             reason = "register_budget"
             break
 
         new_rep = analyze(design, tm)
+        reverted = False
+        if new_rep.critical_path_ns > rep.critical_path_ns:
+            snap.restore(design)
+            new_rep = rep
+            reverted = True
+        # budget hook: consulted on every round that changed the design,
+        # *before* the convergence check — a no-improvement round still
+        # spends a register and must not slip past an external budget
+        if round_hook is not None and not reverted \
+                and not round_hook(design, new_rep):
+            rep = analyze(design, tm)    # the hook may have rewound the design
+            history.append(rep.critical_path_ns)
+            reason = "round_hook"
+            break
         if new_rep.critical_path_ns >= rep.critical_path_ns - p.min_improvement:
             stall += 1
-            if new_rep.critical_path_ns > rep.critical_path_ns:
-                _revert(design, snap_regs, snap_n)
-                new_rep = rep
             if stall >= p.patience:
                 rep = new_rep
                 history.append(rep.critical_path_ns)
@@ -180,10 +228,3 @@ def _add_regs_balanced(rb, k: int):
         idx = free[min(len(free) - 1, (j + 1) * step)] if len(free) > 1 else free[0]
         rb.reg_hops.add(idx)
         free.remove(idx)
-
-
-def _revert(design: RoutedDesign, snap_regs, snap_n):
-    for k, rb in design.routes.items():
-        rb.reg_hops = set(snap_regs[k])
-    for b in design.netlist.branches:
-        b.n_regs = snap_n[b.key]

@@ -54,6 +54,17 @@ class PowerReport:
 
 
 def cycle_energy(design: RoutedDesign, params: EnergyParams) -> Dict[str, float]:
+    """Per-cycle switching energy breakdown (pJ) of a routed design.
+
+    Counts active elements (PEs, MEMs, RFs, FIFOs, IOs), physical pipeline
+    registers (interconnect sites + PE input registers), and switch-box
+    hop traversals; each class is weighted by its calibrated per-cycle
+    energy, the activity factor, and — for sparse designs — the
+    ready-valid companion-wire overhead.  Low-unrolling duplication scales
+    everything by the stamp count (the energy of ``unroll_copies``
+    identical copies).  Keys: ``pe, mem, rf, fifo, io, registers,
+    interconnect``.
+    """
     nl = design.netlist
     k = design.unroll_copies
     counts = {"pe": 0, "mem": 0, "rf": 0, "fifo": 0, "io": 0}
@@ -88,6 +99,15 @@ def cycle_energy(design: RoutedDesign, params: EnergyParams) -> Dict[str, float]
 
 def power_report(design: RoutedDesign, freq_mhz: float, sched: Schedule,
                  params: EnergyParams = EnergyParams()) -> PowerReport:
+    """Power / energy / EDP at ``freq_mhz`` for one scheduled design.
+
+    ``P = P_static + f * E_cycle`` (mW); energy is power times the
+    schedule's runtime at that frequency, and EDP is energy times runtime
+    — the metric the paper's Table I/II comparisons (and the power-capped
+    pipelining controller, :mod:`repro.core.power_cap`) are built on.
+    Deterministic and side-effect free: the cap controller may call it
+    every round without perturbing the design.
+    """
     br = cycle_energy(design, params)
     e_cycle = sum(br.values())                      # pJ
     p_dyn_mw = freq_mhz * e_cycle * 1e-3            # MHz * pJ = uW

@@ -206,6 +206,44 @@ def test_cache_keys_separate_configs_and_flags():
                                c.fabric, c.timing, c.energy)
 
 
+def test_compile_key_covers_every_config_field():
+    """Regression: every PassConfig field — including any added in the
+    future — must participate in the compile-cache content hash.  Two
+    configs differing only in one field must never collide; a new field
+    someone forgets to hash fails here automatically."""
+    from dataclasses import fields as dc_fields, replace
+
+    c = CascadeCompiler()
+    app = ALL_APPS["unsharp"]
+    base_cfg = PassConfig()
+    base = compile_key(app, base_cfg, c.fabric, c.timing, c.energy)
+
+    def perturb(value):
+        if isinstance(value, bool):
+            return not value
+        if isinstance(value, (int, float)):
+            return value + 1
+        if isinstance(value, str):
+            return value + "_x"
+        if isinstance(value, tuple):
+            return value + ("x",)
+        return "__perturbed__"          # None / anything else
+
+    keys = {None: base}
+    for f in dc_fields(PassConfig):
+        cfg = replace(base_cfg, **{f.name: perturb(getattr(base_cfg, f.name))})
+        keys[f.name] = compile_key(app, cfg, c.fabric, c.timing, c.energy)
+        assert keys[f.name] != base, \
+            f"PassConfig.{f.name} does not affect the compile key"
+    # all perturbations are pairwise distinct too
+    assert len(set(keys.values())) == len(keys)
+    # the two fields this PR added, explicitly
+    assert compile_key(app, replace(base_cfg, power_cap_mw=300.0),
+                       c.fabric, c.timing, c.energy) != base
+    assert compile_key(app, replace(base_cfg, schedule="power_capped"),
+                       c.fabric, c.timing, c.energy) != base
+
+
 def test_app_fingerprint_is_content_hash():
     assert app_fingerprint(ALL_APPS["unsharp"]) == \
         app_fingerprint(ALL_APPS["unsharp"])

@@ -1,0 +1,126 @@
+"""Power-model oracle tests.
+
+The power-capped pipelining controller (``repro.core.power_cap``) trusts
+``power.py`` as its budget oracle, so these tests pin the model down:
+unpipelined baselines stay in the calibrated Table-I neighbourhood, and
+the two monotonicity properties the cap logic relies on hold — more
+registers means more register switching energy, and a higher clock means
+higher dynamic power.
+"""
+
+import pytest
+
+from repro.core import (ALL_APPS, CascadeCompiler, CompileCache, EnergyParams,
+                        PassConfig)
+from repro.core.power import cycle_energy, power_report
+
+
+@pytest.fixture(scope="module")
+def unsharp_unpipelined():
+    c = CascadeCompiler(cache=CompileCache())
+    return c.compile(ALL_APPS["unsharp"], PassConfig.unpipelined(
+        place_moves=20))
+
+
+# ---------------------------------------------------------------------------
+# calibration: unpipelined baselines (Table I neighbourhood)
+# ---------------------------------------------------------------------------
+
+
+def test_unpipelined_baseline_in_calibrated_band(unsharp_unpipelined):
+    """The constants were calibrated once so unpipelined dense apps land
+    near the paper's Table I (tens of mW at tens of MHz); a drive-by edit
+    to EnergyParams or the counting logic should trip this band."""
+    r = unsharp_unpipelined
+    assert 20.0 < r.sta.max_freq_mhz < 120.0
+    assert 25.0 < r.power.power_mw < 150.0        # static floor is 25 mW
+    assert r.power.power_mw > EnergyParams().p_static_mw
+    assert r.power.edp_js > 0 and r.power.energy_j > 0
+
+
+def test_breakdown_structure_and_composition(unsharp_unpipelined):
+    """e_cycle is exactly the sum of the per-element breakdown, and the
+    breakdown covers every element class the model knows."""
+    r = unsharp_unpipelined
+    br = r.power.breakdown
+    assert set(br) == {"pe", "mem", "rf", "fifo", "io", "registers",
+                       "interconnect"}
+    assert abs(sum(br.values()) - r.power.e_cycle_pj) < 1e-9
+    assert br["pe"] > 0 and br["interconnect"] > 0
+    # dense design: no FIFOs
+    assert br["fifo"] == 0.0
+    # P = P_static + f * E_cycle (MHz * pJ = uW)
+    expect = EnergyParams().p_static_mw + \
+        r.sta.max_freq_mhz * r.power.e_cycle_pj * 1e-3
+    assert abs(r.power.power_mw - expect) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# monotonicity: the properties the cap controller relies on
+# ---------------------------------------------------------------------------
+
+
+def test_higher_frequency_means_higher_power(unsharp_unpipelined):
+    r = unsharp_unpipelined
+    p1 = power_report(r.design, r.sta.max_freq_mhz, r.schedule)
+    p2 = power_report(r.design, r.sta.max_freq_mhz * 1.3, r.schedule)
+    assert p2.power_mw > p1.power_mw
+    assert p2.e_cycle_pj == p1.e_cycle_pj         # same design, same energy
+    # runtime shrinks with frequency, so dynamic power grows linearly
+    assert p2.runtime_s < p1.runtime_s
+
+
+def test_more_registers_mean_more_register_energy(unsharp_unpipelined):
+    """Adding one pipelining register to a routed branch must raise the
+    register component of the cycle energy — this is why projected power
+    climbs monotonically round over round in post-PnR pipelining."""
+    design = unsharp_unpipelined.design
+    params = EnergyParams()
+    before = cycle_energy(design, params)
+    rb = next(rb for rb in design.routes.values()
+              if rb.hops and not rb.branch.control)
+    free = next(i for i in range(len(rb.hops)) if i not in rb.reg_hops)
+    rb.reg_hops.add(free)
+    rb.branch.n_regs += 1
+    try:
+        after = cycle_energy(design, params)
+    finally:
+        rb.reg_hops.discard(free)
+        rb.branch.n_regs -= 1
+    assert after["registers"] > before["registers"]
+    assert sum(after.values()) > sum(before.values())
+    # only the register class moved
+    for k in before:
+        if k != "registers":
+            assert after[k] == before[k]
+
+
+def test_e_reg_param_scales_register_energy(unsharp_unpipelined):
+    design = unsharp_unpipelined.design
+    lo = cycle_energy(design, EnergyParams(e_reg=0.15))
+    hi = cycle_energy(design, EnergyParams(e_reg=0.30))
+    assert hi["registers"] == pytest.approx(2 * lo["registers"])
+    assert hi["pe"] == lo["pe"]
+
+
+def test_sparse_ready_valid_overhead():
+    """Sparse designs pay the ready-valid companion-wire overhead on
+    registers and interconnect (Section VIII-D)."""
+    c = CascadeCompiler(cache=CompileCache())
+    r = c.compile(ALL_APPS["vecadd"], PassConfig.full(place_moves=20))
+    assert r.design.netlist.sparse
+    base = cycle_energy(r.design, EnergyParams(rv_overhead=1.0))
+    rv = cycle_energy(r.design, EnergyParams(rv_overhead=1.35))
+    assert rv["interconnect"] == pytest.approx(1.35 * base["interconnect"])
+    assert rv["pe"] == base["pe"]
+
+
+def test_pipelining_raises_power_but_cuts_edp():
+    """The paper's headline trade: the pipelined design burns more power
+    (higher f, more registers) yet wins hugely on EDP."""
+    c = CascadeCompiler(cache=CompileCache())
+    app = ALL_APPS["unsharp"]
+    r0 = c.compile(app, PassConfig.unpipelined(place_moves=20))
+    r1 = c.compile(app, PassConfig.full(place_moves=20))
+    assert r1.power.power_mw > r0.power.power_mw
+    assert r1.power.edp_js < r0.power.edp_js

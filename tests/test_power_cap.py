@@ -1,0 +1,202 @@
+"""Power-capped pipelining subsystem: named schedule, budget enforcement,
+rollback checkpointing, cache keying, and byte-identity of the uncapped
+flow with the default schedule."""
+
+import json
+
+import pytest
+
+from repro.core import (ALL_APPS, DENSE_APPS, CascadeCompiler, CompileCache,
+                        DesignCheckpoint, PassConfig, PassPipeline,
+                        compile_key)
+from repro.core.passes import (DEFAULT_SCHEDULE, NAMED_SCHEDULES,
+                               POWER_CAPPED_SCHEDULE, resolve_schedule)
+
+
+def _reg_state(design):
+    return ({k: sorted(rb.reg_hops) for k, rb in design.routes.items()},
+            {b.key: b.n_regs for b in design.netlist.branches})
+
+
+@pytest.fixture(scope="module")
+def compiler():
+    return CascadeCompiler(cache=CompileCache())
+
+
+@pytest.fixture(scope="module")
+def uncapped(compiler):
+    return compiler.compile(ALL_APPS["unsharp"],
+                            PassConfig.power_capped(None, place_moves=20))
+
+
+# ---------------------------------------------------------------------------
+# named schedules
+# ---------------------------------------------------------------------------
+
+
+def test_named_schedule_resolution():
+    assert resolve_schedule(None) == DEFAULT_SCHEDULE
+    assert resolve_schedule("default") == DEFAULT_SCHEDULE
+    assert resolve_schedule("power_capped") == POWER_CAPPED_SCHEDULE
+    assert resolve_schedule(("build", "pnr")) == ("build", "pnr")
+    assert set(NAMED_SCHEDULES) == {"default", "power_capped"}
+    # the capped schedule is the default with post_pnr swapped out
+    assert POWER_CAPPED_SCHEDULE == tuple(
+        "power_capped_pipeline" if n == "post_pnr" else n
+        for n in DEFAULT_SCHEDULE)
+
+
+def test_unknown_named_schedule_raises():
+    with pytest.raises(KeyError, match="unknown named schedule"):
+        PassPipeline.from_config(PassConfig(schedule="no_such_flow"))
+
+
+# ---------------------------------------------------------------------------
+# byte-identity: no cap == the unconstrained flow
+# ---------------------------------------------------------------------------
+
+
+def test_uncapped_matches_default_schedule_byte_identical(compiler, uncapped):
+    """Acceptance: with an infinite cap the power-capped schedule must
+    reproduce the unconstrained post-PnR result exactly — same summary
+    table, same register sites, same branch annotations."""
+    r_def = compiler.compile(ALL_APPS["unsharp"],
+                             PassConfig.full(place_moves=20))
+    assert json.dumps(r_def.summary()) == json.dumps(uncapped.summary())
+    assert _reg_state(r_def.design) == _reg_state(uncapped.design)
+    assert r_def.post_pnr.stop_reason == uncapped.post_pnr.stop_reason
+    assert r_def.post_pnr.history == uncapped.post_pnr.history
+    # float('inf') behaves like None
+    r_inf = compiler.compile(ALL_APPS["unsharp"], PassConfig.power_capped(
+        float("inf"), place_moves=20))
+    assert json.dumps(r_inf.summary()) == json.dumps(uncapped.summary())
+
+
+def test_uncapped_records_monotone_power_trajectory(uncapped):
+    pc = uncapped.power_cap
+    assert pc.feasible and pc.cap_mw is None
+    assert len(pc.trajectory) >= 2                # at least one round ran
+    powers = [p.power_mw for p in pc.trajectory]
+    assert powers == sorted(powers)               # power climbs per round
+    regs = [p.registers_added for p in pc.trajectory]
+    assert regs[0] == 0 and regs == sorted(regs)
+    assert pc.final == pc.trajectory[-1]
+    # the final point is the reported power
+    assert pc.final.power_mw == pytest.approx(uncapped.power.power_mw)
+    assert pc.final.freq_mhz == pytest.approx(uncapped.sta.max_freq_mhz)
+
+
+# ---------------------------------------------------------------------------
+# cap enforcement + rollback
+# ---------------------------------------------------------------------------
+
+
+def test_cap_enforced_with_rollback(compiler, uncapped):
+    traj = uncapped.power_cap.trajectory
+    # a cap strictly between two trajectory points forces a mid-loop stop
+    cap = (traj[0].power_mw + traj[-1].power_mw) / 2.0
+    r = compiler.compile(ALL_APPS["unsharp"],
+                         PassConfig.power_capped(cap, place_moves=20))
+    pc = r.power_cap
+    assert pc.feasible
+    assert pc.stop_reason == "power_cap"
+    assert pc.rounds_rolled_back == 1
+    assert r.power.power_mw <= cap
+    assert pc.final.power_mw == pytest.approx(r.power.power_mw)
+    # the cap costs clock but saves registers and power
+    assert r.sta.max_freq_mhz < uncapped.sta.max_freq_mhz
+    assert pc.final.registers_added < \
+        uncapped.power_cap.final.registers_added
+    # the capped run retraces the uncapped trajectory up to the cap
+    capped_powers = [p.power_mw for p in pc.trajectory]
+    uncapped_powers = [p.power_mw for p in traj[:len(capped_powers)]]
+    assert capped_powers == pytest.approx(uncapped_powers)
+
+
+def test_infeasible_cap_reports_initial_state(compiler, uncapped):
+    initial = uncapped.power_cap.initial
+    r = compiler.compile(ALL_APPS["unsharp"], PassConfig.power_capped(
+        initial.power_mw * 0.5, place_moves=20))
+    pc = r.power_cap
+    assert not pc.feasible
+    assert pc.stop_reason == "cap_infeasible"
+    assert pc.rounds_rolled_back == 0
+    assert pc.final.registers_added == 0
+    assert pc.final.power_mw == pytest.approx(initial.power_mw)
+    assert pc.post_pnr.iterations == 0
+
+
+def test_checkpoint_roundtrip(compiler, uncapped):
+    """DesignCheckpoint must restore exactly the state it captured —
+    the rollback mechanism future exploration passes will reuse."""
+    design = compiler.compile(ALL_APPS["unsharp"],
+                              PassConfig.full(place_moves=20)).design
+    before = _reg_state(design)
+    ckpt = DesignCheckpoint.capture(design)
+    # scramble the pipelining state
+    for rb in design.routes.values():
+        if rb.hops:
+            rb.reg_hops = set(range(len(rb.hops)))
+        rb.branch.n_regs += 3
+    assert _reg_state(design) != before
+    ckpt.restore(design)
+    assert _reg_state(design) == before
+
+
+# ---------------------------------------------------------------------------
+# cache keying
+# ---------------------------------------------------------------------------
+
+
+def test_cache_keys_on_cap_and_schedule(compiler):
+    app = ALL_APPS["unsharp"]
+    f, t, e = compiler.fabric, compiler.timing, compiler.energy
+    k_def = compile_key(app, PassConfig.full(), f, t, e)
+    k_unc = compile_key(app, PassConfig.power_capped(None), f, t, e)
+    k_300 = compile_key(app, PassConfig.power_capped(300.0), f, t, e)
+    k_301 = compile_key(app, PassConfig.power_capped(301.0), f, t, e)
+    assert len({k_def, k_unc, k_300, k_301}) == 4
+
+
+def test_capped_results_cached_independently(compiler, uncapped):
+    traj = uncapped.power_cap.trajectory
+    cap = (traj[0].power_mw + traj[-1].power_mw) / 2.0
+    cfg = PassConfig.power_capped(cap, place_moves=20)
+    r1 = compiler.compile(ALL_APPS["unsharp"], cfg)
+    r2 = compiler.compile(ALL_APPS["unsharp"], cfg)
+    assert r2.cache_hit
+    assert r2.power_cap.summary() == r1.power_cap.summary()
+    # ...and the cached entry round-trips the full trajectory
+    assert [p.power_mw for p in r2.power_cap.trajectory] == \
+        [p.power_mw for p in r1.power_cap.trajectory]
+
+
+# ---------------------------------------------------------------------------
+# acceptance: every dense app under two caps
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_every_dense_app_compiles_under_two_caps():
+    """Acceptance criterion: schedule="power_capped" compiles every dense
+    benchmark app under at least two (feasible) caps and never exceeds the
+    cap in the reported power."""
+    c = CascadeCompiler(cache=CompileCache())
+    base = {a: r for a, r in zip(sorted(DENSE_APPS), c.compile_batch(
+        [(ALL_APPS[a], PassConfig.power_capped(None, place_moves=20))
+         for a in sorted(DENSE_APPS)]))}
+    jobs, caps = [], []
+    for a in sorted(DENSE_APPS):
+        pc = base[a].power_cap
+        lo, hi = pc.initial.power_mw, pc.final.power_mw
+        for frac in (0.35, 0.75):                 # between initial and final
+            cap = lo + frac * (hi - lo)
+            caps.append((a, cap))
+            jobs.append((ALL_APPS[a], PassConfig.power_capped(
+                cap, place_moves=20)))
+    for (a, cap), r in zip(caps, c.compile_batch(jobs)):
+        assert r.power_cap.feasible, (a, cap)
+        assert r.power.power_mw <= cap + 1e-9, (a, cap, r.power.power_mw)
+        assert r.power.power_mw == pytest.approx(
+            r.power_cap.final.power_mw), a
+        assert r.sta.max_freq_mhz <= base[a].sta.max_freq_mhz + 1e-9, a

@@ -1,0 +1,113 @@
+"""Docs lint: broken links, stale module references, architecture coverage.
+
+    python tools/check_docs.py          # exit 1 on any failure
+
+Three checks over ``docs/*.md`` + ``README.md`` (stdlib only, so the CI
+docs job needs no dependencies):
+
+1. **Intra-repo links** — every relative markdown link target
+   (``[text](path)``) must exist on disk (anchors and external
+   ``http(s)://`` / ``mailto:`` links are skipped).
+2. **Stale module references** — every ``src/repro/...py`` path and every
+   ``repro.core.<module>`` dotted name mentioned in prose/code spans must
+   refer to a file that actually exists.
+3. **Architecture coverage** — every module under ``src/repro/core/*.py``
+   must be referenced in ``docs/architecture.md`` (new subsystems must be
+   documented in the same PR that adds them).
+
+Also importable (``tests/test_docs.py`` runs the same checks in tier-1).
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import List
+
+REPO = Path(__file__).resolve().parent.parent
+ARCHITECTURE = REPO / "docs" / "architecture.md"
+
+# [text](target) — target up to the first ')' or '#', skipping images' size
+# attrs and reference-style links (which this repo doesn't use)
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#\s]+)[^)]*\)")
+_SRC_PATH_RE = re.compile(r"src/repro/[\w./-]+\.py")
+_CORE_MOD_RE = re.compile(r"repro\.core\.(\w+)")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def doc_files() -> List[Path]:
+    files = [REPO / "README.md"]
+    files += sorted((REPO / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def core_modules() -> List[str]:
+    return sorted(p.stem for p in (REPO / "src/repro/core").glob("*.py"))
+
+
+def check_links() -> List[str]:
+    """Every relative markdown link must resolve (relative to its file)."""
+    errors = []
+    for md in doc_files():
+        text = md.read_text()
+        for m in _LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(_EXTERNAL) or target.startswith("#"):
+                continue
+            resolved = (md.parent / target).resolve()
+            if not resolved.exists():
+                line = text[:m.start()].count("\n") + 1
+                errors.append(f"{md.relative_to(REPO)}:{line}: broken link "
+                              f"-> {target}")
+    return errors
+
+
+def check_stale_refs() -> List[str]:
+    """Every src/repro path or repro.core dotted name must exist."""
+    errors = []
+    modules = set(core_modules())
+    for md in doc_files():
+        text = md.read_text()
+        for m in _SRC_PATH_RE.finditer(text):
+            if not (REPO / m.group(0)).exists():
+                line = text[:m.start()].count("\n") + 1
+                errors.append(f"{md.relative_to(REPO)}:{line}: stale path "
+                              f"reference -> {m.group(0)}")
+        for m in _CORE_MOD_RE.finditer(text):
+            if m.group(1) not in modules:
+                line = text[:m.start()].count("\n") + 1
+                errors.append(f"{md.relative_to(REPO)}:{line}: stale module "
+                              f"reference -> repro.core.{m.group(1)}")
+    return errors
+
+
+def check_architecture_coverage() -> List[str]:
+    """docs/architecture.md must reference every repro.core module."""
+    if not ARCHITECTURE.exists():
+        return [f"missing {ARCHITECTURE}"]
+    text = ARCHITECTURE.read_text()
+    errors = []
+    for mod in core_modules():
+        if f"{mod}.py" not in text and f"repro.core.{mod}" not in text:
+            errors.append(f"docs/architecture.md: core module {mod}.py is "
+                          f"not documented")
+    return errors
+
+
+def main() -> int:
+    errors = check_links() + check_stale_refs() + check_architecture_coverage()
+    for e in errors:
+        print(f"[check_docs] {e}", file=sys.stderr)
+    files = len(doc_files())
+    if errors:
+        print(f"[check_docs] FAILED: {len(errors)} problem(s) across "
+              f"{files} file(s)", file=sys.stderr)
+        return 1
+    print(f"[check_docs] OK: {files} doc file(s), "
+          f"{len(core_modules())} core modules covered")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
