@@ -1,0 +1,188 @@
+"""Frontier benchmark: in-compile Pareto sweep vs N independent compiles.
+
+The ``"explore"`` schedule compiles the mapping/placement/routing prefix
+once and forks the routed design across a (register budget x power cap)
+grid; stage-artifact caching makes a *second* sweep skip even that prefix.
+This bench quantifies both against the old way — N full compiles — and
+verifies the frontier points are byte-identical to them:
+
+    PYTHONPATH=src python -m benchmarks.frontier [--fast] [--app NAME]
+        [--backend auto|thread|process] [--workers N] [--moves N]
+        [--bench-out BENCH_frontier.json]
+
+Each run appends a record to ``BENCH_frontier.json`` (wall clock for the
+independent ladder, the cold sweep, and the warm-prefix sweep, plus the
+frontier rows and the byte-identity verdict) so the trajectory is tracked
+across runs and PRs, like ``BENCH_pnr.json`` for raw PnR.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List, Optional, Sequence
+
+from benchmarks._util import append_bench_record, print_batch_stats, print_csv
+from repro.core import CascadeCompiler, CompileCache, ExploreSpec, PassConfig
+from repro.core.apps import ALL_APPS
+
+MOVES = 100
+FAST_MOVES = 40
+BUDGETS = (4, 16, 64, None)
+FAST_BUDGETS = (8, 32, None)
+CAP_FRACTIONS = (0.9, None)          # fractions of the uncapped power
+FAST_CAP_FRACTIONS = (None,)
+
+
+def _point_config(budget, cap, moves: int) -> PassConfig:
+    """The config an independent compile of one sweep point uses."""
+    if cap is not None:
+        return PassConfig.power_capped(cap, post_pnr_budget=budget,
+                                       place_moves=moves)
+    return PassConfig.full(post_pnr_budget=budget, place_moves=moves)
+
+
+def _metrics(r) -> tuple:
+    return (r.sta.max_freq_mhz, r.power.power_mw, r.power.edp_js,
+            r.design.netlist.added_registers())
+
+
+def run_frontier(app: str = "unsharp", moves: int = MOVES,
+                 budgets: Sequence[Optional[int]] = BUDGETS,
+                 cap_fractions: Sequence[Optional[float]] = CAP_FRACTIONS,
+                 backend: str = "auto", workers: Optional[int] = None,
+                 bench_out: Optional[str] = "BENCH_frontier.json"
+                 ) -> Dict[str, object]:
+    spec_app = ALL_APPS[app]
+
+    # -- the old way: one full compile per sweep point (cold, no caches) --
+    cold = CascadeCompiler(cache=CompileCache(), stage_cache=CompileCache())
+    t0 = time.perf_counter()
+    base = cold.compile(spec_app, PassConfig.full(place_moves=moves),
+                        use_cache=False)
+    t_base = time.perf_counter() - t0
+    caps = [None if f is None else base.power.power_mw * f
+            for f in cap_fractions]
+    points = [(b, c) for b in budgets for c in caps]
+
+    independent: Dict[tuple, tuple] = {}
+    t_independent = 0.0
+    for b, c in points:
+        if (b, c) == (None, None):
+            independent[(b, c)] = _metrics(base)
+            t_independent += t_base
+            continue
+        t0 = time.perf_counter()
+        r = cold.compile(spec_app, _point_config(b, c, moves),
+                         use_cache=False)
+        t_independent += time.perf_counter() - t0
+        independent[(b, c)] = _metrics(r)
+
+    # -- the new way: one explore compile over the same grid --------------
+    spec = ExploreSpec(register_budgets=tuple(budgets),
+                       power_caps_mw=tuple(caps))
+    sweep = CascadeCompiler(cache=CompileCache(), stage_cache=CompileCache(),
+                            batch_backend=backend, batch_workers=workers)
+    t0 = time.perf_counter()
+    (rf,) = sweep.compile_batch(
+        [(spec_app, PassConfig.frontier(spec, place_moves=moves))])
+    t_frontier_cold = time.perf_counter() - t0
+    print_batch_stats(sweep, f"frontier cold ({app})")
+
+    # warm prefix: a different sweep over the same routed artifact (the
+    # select policy is a post-PnR knob, so the final key misses while the
+    # routed stage key hits)
+    import dataclasses
+    warm_spec = dataclasses.replace(spec, select="max_freq")
+    t0 = time.perf_counter()
+    (rw,) = sweep.compile_batch(
+        [(spec_app, PassConfig.frontier(warm_spec, place_moves=moves))])
+    t_frontier_warm = time.perf_counter() - t0
+    print_batch_stats(sweep, f"frontier warm ({app})")
+    assert rw.pass_stats.get("stage_resume") == "routed", \
+        "warm sweep did not resume from the routed stage artifact"
+
+    # -- verify: byte-identity per point + non-dominated frontier ---------
+    byte_identical = True
+    for (b, c) in points:
+        pt = rf.frontier.point_for(b, c)
+        got = (pt.freq_mhz, pt.power_mw, pt.edp_js, pt.registers_added)
+        if got != independent[(b, c)]:
+            byte_identical = False
+            print(f"[frontier] MISMATCH at (budget={b}, cap={c}): "
+                  f"sweep {got} vs independent {independent[(b, c)]}")
+
+    rows: List[Dict] = []
+    for p in rf.frontier.all_points():
+        row = {"app": app, **p.scaled()}
+        row["power_cap_mw"] = (round(row["power_cap_mw"], 2)
+                               if row["power_cap_mw"] is not None else None)
+        row["edp_ujs"] = round(row["edp_ujs"], 4)
+        rows.append(row)
+    print_csv(rows, "frontier: in-compile Pareto sweep (budgets x caps)")
+
+    n = len(points)
+    speedup_cold = t_independent / t_frontier_cold if t_frontier_cold else 0.0
+    speedup_warm = t_independent / t_frontier_warm if t_frontier_warm else 0.0
+    two_independent = 2.0 * t_independent / n    # 2 average full compiles
+    print(f"[frontier] {app}: {n} points | independent {t_independent:.1f}s"
+          f" | sweep cold {t_frontier_cold:.1f}s ({speedup_cold:.1f}x)"
+          f" | sweep warm {t_frontier_warm:.1f}s ({speedup_warm:.1f}x)"
+          f" | byte-identical: {byte_identical}"
+          f" | non-dominated {len(rf.frontier.points)}/{n}"
+          f" | warm sweep vs 2 compiles: {t_frontier_warm:.1f}s vs "
+          f"{two_independent:.1f}s")
+
+    record = {
+        "app": app, "moves": moves, "points": n,
+        "backend": sweep.last_batch.get("backend"),
+        "workers": sweep.last_batch.get("workers"),
+        "independent_seconds": round(t_independent, 3),
+        "frontier_cold_seconds": round(t_frontier_cold, 3),
+        "frontier_warm_seconds": round(t_frontier_warm, 3),
+        "speedup_cold": round(speedup_cold, 2),
+        "speedup_warm": round(speedup_warm, 2),
+        "two_independent_seconds": round(two_independent, 3),
+        "warm_under_two_independents": t_frontier_warm < two_independent,
+        "byte_identical": byte_identical,
+        "non_dominated": len(rf.frontier.points),
+        "frontier": rows,
+    }
+    if bench_out:
+        append_bench_record(bench_out, record)
+    return record
+
+
+def run_all(fast: bool = False, backend: str = "auto",
+            workers: Optional[int] = None,
+            bench_out: Optional[str] = "BENCH_frontier.json") -> Dict:
+    return {"frontier": run_frontier(
+        moves=FAST_MOVES if fast else MOVES,
+        budgets=FAST_BUDGETS if fast else BUDGETS,
+        cap_fractions=FAST_CAP_FRACTIONS if fast else CAP_FRACTIONS,
+        backend=backend, workers=workers, bench_out=bench_out)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--app", default="unsharp",
+                    help="dense app to sweep (default unsharp)")
+    ap.add_argument("--fast", action="store_true",
+                    help="3-point sweep at reduced SA moves (CI smoke)")
+    ap.add_argument("--moves", type=int, default=None)
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto", "thread", "process"))
+    ap.add_argument("--workers", type=int, default=None)
+    ap.add_argument("--bench-out", default="BENCH_frontier.json")
+    args = ap.parse_args()
+    run_frontier(
+        app=args.app,
+        moves=args.moves or (FAST_MOVES if args.fast else MOVES),
+        budgets=FAST_BUDGETS if args.fast else BUDGETS,
+        cap_fractions=FAST_CAP_FRACTIONS if args.fast else CAP_FRACTIONS,
+        backend=args.backend, workers=args.workers,
+        bench_out=args.bench_out)
+
+
+if __name__ == "__main__":
+    main()

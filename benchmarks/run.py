@@ -30,12 +30,13 @@ def _band(name: str, lo, hi, values, allow_slack=0.0) -> str:
 
 
 def main() -> None:
-    from repro.core import (BATCH_BACKENDS, DEFAULT_CACHE, attach_disk_cache,
-                            worker_count)
+    from repro.core import (BATCH_BACKENDS, DEFAULT_CACHE,
+                            DEFAULT_STAGE_CACHE, attach_disk_cache,
+                            attach_stage_disk_cache, worker_count)
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="cascade|lm|roofline|pipeline|ablations")
+                    help="cascade|lm|roofline|pipeline|ablations|frontier")
     ap.add_argument("--fast", action="store_true",
                     help="reduced SA move counts / sweep grids for a quick "
                          "smoke run (tables keep their shape, lose accuracy)")
@@ -52,12 +53,15 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.no_disk_cache:
-        # also detach a tier CASCADE_DISK_CACHE=1 attached at import —
+        # also detach tiers CASCADE_DISK_CACHE=1 attached at import —
         # "--no-disk-cache" must actually mean cold compiles
         DEFAULT_CACHE.disk = None
+        DEFAULT_STAGE_CACHE.disk = None
     else:
         disk = attach_disk_cache()
+        stages = attach_stage_disk_cache()
         print(f"[bench] disk compile cache: {disk.dir}")
+        print(f"[bench] disk stage-artifact cache: {stages.dir}")
     t0 = time.time()
     results = {}
     sections = {}
@@ -86,6 +90,11 @@ def main() -> None:
     if args.only in (None, "ablations"):
         from benchmarks import ablations
         results["ablations"] = section("ablations", lambda: ablations.run_all(
+            fast=args.fast, backend=args.backend, workers=args.workers))
+
+    if args.only in (None, "frontier"):
+        from benchmarks import frontier
+        results["frontier"] = section("frontier", lambda: frontier.run_all(
             fast=args.fast, backend=args.backend, workers=args.workers))
 
     if args.only in (None, "roofline"):

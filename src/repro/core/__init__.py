@@ -11,20 +11,27 @@ from .apps import ALL_APPS, DENSE_APPS, SPARSE_APPS, AppSpec
 from .branch_delay import (arrival_cycles_dfg, check_matched_dfg,
                            check_matched_netlist, match_dfg, match_netlist)
 from .broadcast import broadcast_pipelining
-from .cache import (DEFAULT_CACHE, CompileCache, DiskCache, app_fingerprint,
-                    attach_disk_cache, code_fingerprint, compile_key,
-                    dfg_fingerprint)
-from .compiler import (BATCH_BACKENDS, CascadeCompiler, CompileResult,
-                       PassConfig, compile_batch)
+from .cache import (DEFAULT_CACHE, DEFAULT_STAGE_CACHE, CompileCache,
+                    DiskCache, app_fingerprint, attach_disk_cache,
+                    attach_stage_disk_cache, code_fingerprint, compile_key,
+                    dfg_fingerprint, stage_key)
+from .compiler import (BATCH_BACKENDS, CACHED_STAGES, BatchCompileError,
+                       CascadeCompiler, CompileResult, PassConfig,
+                       compile_batch)
 from .config import (cache_dir, default_power_cap_mw, disk_cache_enabled,
                      env_flag, env_float, place_debug, worker_count)
 from .dfg import DFG
+from .explore import (ExploreSpec, FrontierPoint, ParetoFrontier,
+                      evaluate_candidate, explore_frontier, pareto_prune)
 from .flush import add_soft_flush, remove_flush
 from .interconnect import Fabric, Hop, Tile
+from .metrics import DesignMetrics, evaluate_design
 from .netlist import Netlist, RoutedDesign, extract_netlist
-from .passes import (DEFAULT_SCHEDULE, NAMED_SCHEDULES, PASS_REGISTRY,
-                     POWER_CAPPED_SCHEDULE, CompileContext, Pass,
-                     PassPipeline, register_pass, resolve_schedule)
+from .passes import (CONFIG_FIELD_STAGE, DEFAULT_SCHEDULE, EXPLORE_SCHEDULE,
+                     NAMED_SCHEDULES, PASS_REGISTRY, POWER_CAPPED_SCHEDULE,
+                     STAGE_OF_PASS, STAGE_ORDER, CompileContext, Pass,
+                     PassPipeline, StageArtifact, register_pass,
+                     resolve_schedule, stage_plan)
 from .pipelining import collapse_reg_chains, compute_pipelining, find_reg_chains
 from .place import PlaceParams, place, placement_stats
 from .post_pnr import PostPnRParams, post_pnr_pipeline
@@ -41,14 +48,21 @@ from .unroll import max_copies, subfabric_for
 __all__ = [
     "ALL_APPS", "DENSE_APPS", "SPARSE_APPS", "AppSpec",
     "CascadeCompiler", "CompileResult", "PassConfig", "compile_batch",
-    "BATCH_BACKENDS",
-    "CompileCache", "DiskCache", "DEFAULT_CACHE", "attach_disk_cache",
-    "compile_key", "app_fingerprint", "dfg_fingerprint", "code_fingerprint",
+    "BATCH_BACKENDS", "BatchCompileError",
+    "CompileCache", "DiskCache", "DEFAULT_CACHE", "DEFAULT_STAGE_CACHE",
+    "attach_disk_cache", "attach_stage_disk_cache",
+    "compile_key", "stage_key", "app_fingerprint", "dfg_fingerprint",
+    "code_fingerprint",
     "cache_dir", "default_power_cap_mw", "disk_cache_enabled", "env_flag",
     "env_float", "place_debug", "worker_count",
     "CompileContext", "Pass", "PassPipeline", "PASS_REGISTRY",
-    "DEFAULT_SCHEDULE", "POWER_CAPPED_SCHEDULE", "NAMED_SCHEDULES",
-    "resolve_schedule", "register_pass", "find_reg_chains",
+    "DEFAULT_SCHEDULE", "POWER_CAPPED_SCHEDULE", "EXPLORE_SCHEDULE",
+    "NAMED_SCHEDULES", "resolve_schedule", "register_pass", "find_reg_chains",
+    "STAGE_ORDER", "STAGE_OF_PASS", "CONFIG_FIELD_STAGE", "CACHED_STAGES",
+    "StageArtifact", "stage_plan",
+    "ExploreSpec", "FrontierPoint", "ParetoFrontier", "evaluate_candidate",
+    "explore_frontier", "pareto_prune",
+    "DesignMetrics", "evaluate_design",
     "DFG", "Fabric", "Hop", "Tile", "Netlist", "RoutedDesign",
     "TimingModel", "TECH_NS", "generate_timing_model",
     "analyze", "sdf_simulate_fmax", "STAReport",

@@ -79,21 +79,84 @@ def app_fingerprint(app: AppSpec) -> str:
     ).hexdigest()
 
 
-def compile_key(app: AppSpec, config: Any, fabric: Fabric,
-                timing: TimingModel, energy: EnergyParams,
-                unroll: Optional[int] = None, verify: bool = False) -> str:
-    """The full content-hash cache key for one compile invocation."""
-    cfg_items = tuple(sorted(asdict(config).items()))
+def _env_items(fabric: Fabric, timing: TimingModel, energy: EnergyParams):
+    """The (fabric, timing, energy) portion of a content hash."""
     fabric_items = tuple(
         (f.name, getattr(fabric, f.name)) for f in dc_fields(fabric))
     timing_items = (timing.fabric_name,
                     tuple(sorted(timing.entries.items())))
     energy_items = tuple(sorted(asdict(energy).items()))
+    return fabric_items, timing_items, energy_items
+
+
+def compile_key(app: AppSpec, config: Any, fabric: Fabric,
+                timing: TimingModel, energy: EnergyParams,
+                unroll: Optional[int] = None, verify: bool = False,
+                app_fp: Optional[str] = None) -> str:
+    """The full content-hash cache key for one compile invocation.
+
+    ``app_fp`` lets a caller that already fingerprinted the app (the
+    compile driver computes one fingerprint per invocation and shares it
+    with the stage keys) skip the redundant builder runs.
+    """
+    cfg_items = tuple(sorted(asdict(config).items()))
+    fabric_items, timing_items, energy_items = _env_items(
+        fabric, timing, energy)
     h = hashlib.sha256()
-    h.update(app_fingerprint(app).encode())
+    h.update((app_fp or app_fingerprint(app)).encode())
     h.update(repr((cfg_items, fabric_items, timing_items, energy_items,
                    unroll, verify)).encode())
     return h.hexdigest()
+
+
+def stage_key(app: AppSpec, config: Any, fabric: Fabric,
+              timing: TimingModel, energy: EnergyParams, stage: str,
+              prefix: tuple, unroll: Optional[int] = None,
+              app_fp: Optional[str] = None) -> str:
+    """Prefix content hash for a stage artifact.
+
+    Unlike :func:`compile_key`, only the inputs that can influence the
+    flow *up to and including* ``stage`` participate:
+
+    * the config fields whose :data:`~repro.core.passes.CONFIG_FIELD_STAGE`
+      assignment is at or before ``stage`` — so "same app, different
+      post-PnR knobs" hashes to the same routed-stage key and resumes
+      from the cached artifact;
+    * the resolved schedule *prefix* (the actual pass names the artifact
+      embodies) rather than the raw ``schedule`` field — the named
+      schedules differ only after routing, so they share prefix keys;
+    * the energy parameters only from the ``pipelined`` stage on (no
+      earlier pass reads them);
+    * never the ``verify`` flag (a report-stage concern), so verifying
+      re-compiles resume from artifacts of non-verifying ones.
+
+    A config field missing from ``CONFIG_FIELD_STAGE`` raises — an
+    unclassified field must never silently alias stage artifacts.
+    """
+    from .passes import CONFIG_FIELD_STAGE, STAGE_ORDER
+    si = STAGE_ORDER.index(stage)
+    cfg_dict = asdict(config)
+    cfg_items = []
+    for name in sorted(cfg_dict):
+        field_stage = CONFIG_FIELD_STAGE.get(name)
+        if field_stage is None:
+            raise KeyError(
+                f"PassConfig field {name!r} has no CONFIG_FIELD_STAGE "
+                f"assignment; classify it before stage-caching configs "
+                f"that carry it")
+        if name == "schedule":
+            continue                  # represented by the resolved prefix
+        if STAGE_ORDER.index(field_stage) <= si:
+            cfg_items.append((name, cfg_dict[name]))
+    fabric_items, timing_items, energy_items = _env_items(
+        fabric, timing, energy)
+    if si < STAGE_ORDER.index("pipelined"):
+        energy_items = ()
+    h = hashlib.sha256()
+    h.update((app_fp or app_fingerprint(app)).encode())
+    h.update(repr((stage, tuple(prefix), tuple(cfg_items), fabric_items,
+                   timing_items, energy_items, unroll)).encode())
+    return "stage-" + h.hexdigest()
 
 
 # ---------------------------------------------------------------------------
@@ -349,6 +412,14 @@ class CompileCache:
 DEFAULT_CACHE = CompileCache(maxsize=512)
 
 
+#: Process-wide default *stage-artifact* cache: the same two-tier
+#: :class:`CompileCache` machinery, but keyed by :func:`stage_key` and
+#: holding :class:`~repro.core.passes.StageArtifact` snapshots instead of
+#: final results.  Kept separate from :data:`DEFAULT_CACHE` so final-result
+#: hit/miss statistics stay meaningful and artifacts can't evict results.
+DEFAULT_STAGE_CACHE = CompileCache(maxsize=128)
+
+
 def attach_disk_cache(cache: Optional[CompileCache] = None,
                       **disk_kwargs) -> DiskCache:
     """Attach (idempotently) a :class:`DiskCache` tier to ``cache``
@@ -361,5 +432,24 @@ def attach_disk_cache(cache: Optional[CompileCache] = None,
     return c.disk
 
 
+def attach_stage_disk_cache(cache: Optional[CompileCache] = None,
+                            **disk_kwargs) -> DiskCache:
+    """Attach (idempotently) a disk tier for *stage artifacts* to ``cache``
+    (``DEFAULT_STAGE_CACHE`` when omitted) and return it.
+
+    Lives under ``<cache root>/stages`` — alongside, but not inside, the
+    compile-result namespace — with the same schema/code-fingerprint
+    namespacing, atomic writes, and size bound; a second process (CI
+    shard, repeat benchmark) then resumes compiles from the deepest
+    cached stage even on configs it has never fully compiled.
+    """
+    c = DEFAULT_STAGE_CACHE if cache is None else cache
+    if c.disk is None:
+        disk_kwargs.setdefault("root", _default_cache_root() / "stages")
+        c.disk = DiskCache(**disk_kwargs)
+    return c.disk
+
+
 if disk_cache_enabled():
     attach_disk_cache()
+    attach_stage_disk_cache()

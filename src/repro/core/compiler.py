@@ -29,11 +29,15 @@ from dataclasses import dataclass, field, replace as dc_replace
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 from .apps import AppSpec
-from .cache import DEFAULT_CACHE, CompileCache, compile_key
+from .cache import (DEFAULT_CACHE, DEFAULT_STAGE_CACHE, CompileCache,
+                    app_fingerprint, compile_key, stage_key)
 from .config import worker_count
+from .explore import (ExploreSpec, ParetoFrontier, evaluate_candidate,
+                      map_points_serial)
 from .interconnect import Fabric
 from .netlist import RoutedDesign
-from .passes import CompileContext, PassPipeline
+from .passes import (STAGE_ORDER, CompileContext, PassPipeline, StageArtifact,
+                     resolve_schedule, stage_plan)
 from .post_pnr import PostPnRResult
 from .power import EnergyParams, PowerReport, power_report
 from .power_cap import PowerCapResult
@@ -70,8 +74,11 @@ class PassConfig:
     #: Power budget (mW) for the ``power_capped_pipeline`` pass; ``None``
     #: means unconstrained (byte-identical to the plain post-PnR pass).
     power_cap_mw: Optional[float] = None
+    #: Sweep grid for the ``pareto_frontier`` pass (``"explore"``
+    #: schedule); ``None`` falls back to the single-point default spec.
+    explore: Optional[ExploreSpec] = None
     #: Pass schedule: ``None`` -> default flow; a named schedule string
-    #: (``"default"`` / ``"power_capped"``, see
+    #: (``"default"`` / ``"power_capped"`` / ``"explore"``, see
     #: ``repro.core.passes.NAMED_SCHEDULES``); or an explicit tuple of
     #: registered pass names.
     schedule: Union[str, Tuple[str, ...], None] = None
@@ -92,6 +99,14 @@ class PassConfig:
         """The full flow with post-PnR pipelining bounded by ``cap_mw``."""
         return cls(power_cap_mw=cap_mw, schedule="power_capped", **kw)
 
+    @classmethod
+    def frontier(cls, spec: Optional[ExploreSpec] = None,
+                 **kw) -> "PassConfig":
+        """The full flow with in-compile design-space exploration: sweep
+        ``spec``'s (register budget, power cap) grid from one routed
+        design and report the Pareto frontier."""
+        return cls(explore=spec or ExploreSpec(), schedule="explore", **kw)
+
 
 @dataclass
 class CompileResult:
@@ -104,6 +119,7 @@ class CompileResult:
     pass_stats: Dict[str, object] = field(default_factory=dict)
     post_pnr: Optional[PostPnRResult] = None
     power_cap: Optional[PowerCapResult] = None
+    frontier: Optional[ParetoFrontier] = None
     compile_seconds: float = 0.0
     cache_hit: bool = False
 
@@ -143,7 +159,33 @@ def _process_context():
     return multiprocessing.get_context("spawn")
 
 
-def _compile_job_in_worker(app: AppSpec, cfg: "PassConfig",
+class BatchCompileError(RuntimeError):
+    """A ``compile_batch`` job (or frontier sweep point) failed.
+
+    Wraps the worker's exception with the job index, app name, and — for
+    frontier fan-out — the sweep point, so a failing point in a
+    thousand-job sweep reports *which* job died instead of a bare pickled
+    traceback.  The original exception is chained as ``__cause__``.
+    """
+
+    def __init__(self, message: str, job_index: Optional[int] = None,
+                 app_name: Optional[str] = None):
+        super().__init__(message)
+        self.job_index = job_index
+        self.app_name = app_name
+
+
+def _wrap_job_error(exc: Exception, job_index: int, app: AppSpec,
+                    where: str) -> BatchCompileError:
+    err = BatchCompileError(
+        f"batch job {job_index} (app {app.name!r}) failed {where}: "
+        f"{type(exc).__name__}: {exc}", job_index=job_index,
+        app_name=app.name)
+    err.__cause__ = exc
+    return err
+
+
+def _compile_job_in_worker(job_index: int, app: AppSpec, cfg: "PassConfig",
                            unroll: Optional[int], verify: bool,
                            fabric: Fabric, timing: TimingModel,
                            energy: EnergyParams) -> bytes:
@@ -155,13 +197,64 @@ def _compile_job_in_worker(app: AppSpec, cfg: "PassConfig",
     process backend byte-identical to serial compiles.  Returning the
     pickle (rather than the object) lets the parent materialize the cache
     entry and the caller's result as two independent objects for the cost
-    of two cheap loads instead of an expensive deep copy.
+    of two cheap loads instead of an expensive deep copy.  Failures cross
+    back as :class:`BatchCompileError` carrying the job index, app name,
+    and the worker-side traceback in the message.
     """
     compiler = CascadeCompiler(fabric=fabric, timing=timing, energy=energy,
-                               cache=CompileCache(maxsize=1))
-    result = compiler.compile(app, cfg, unroll=unroll, verify=verify,
-                              use_cache=False)
+                               cache=CompileCache(maxsize=1),
+                               stage_cache=CompileCache(maxsize=1))
+    try:
+        result = compiler.compile(app, cfg, unroll=unroll, verify=verify,
+                                  use_cache=False)
+    except Exception as e:
+        import traceback
+        raise BatchCompileError(
+            f"batch job {job_index} (app {app.name!r}) failed in process "
+            f"worker: {type(e).__name__}: {e}\n{traceback.format_exc()}",
+            job_index=job_index, app_name=app.name) from None
     return pickle.dumps(result)
+
+
+def _frontier_fanout(cfg: "PassConfig") -> int:
+    """How many sweep points the ``pareto_frontier`` pass would evaluate
+    for this config — 0 when its schedule doesn't run the pass (unknown
+    schedule names report 0 here and fail loudly at compile time)."""
+    try:
+        sched = resolve_schedule(cfg.schedule)
+    except KeyError:
+        return 0
+    if "pareto_frontier" not in sched or not cfg.post_pnr:
+        return 0
+    return len((cfg.explore or ExploreSpec()).points())
+
+
+def _frontier_point_in_worker(blob: bytes, budget, cap, kwargs: dict,
+                              job_index: int, app_name: str) -> bytes:
+    """Evaluate one frontier sweep point in a worker process.
+
+    ``blob`` is one pickle of the shared (routed design, timing, energy,
+    iterations) baseline — unpickling already yields a private copy, so
+    the candidate runs with ``copy_design=False``.
+    """
+    design, tm, energy, iterations = pickle.loads(blob)
+    try:
+        pt = evaluate_candidate(design, tm, energy, iterations, budget, cap,
+                                copy_design=False, **kwargs)
+    except Exception as e:
+        import traceback
+        raise BatchCompileError(
+            f"batch job {job_index} (app {app_name!r}) frontier point "
+            f"(budget={budget}, cap={cap}) failed in process worker: "
+            f"{type(e).__name__}: {e}\n{traceback.format_exc()}",
+            job_index=job_index, app_name=app_name) from None
+    return pickle.dumps(pt)
+
+
+#: Stage boundaries the driver snapshots and probes, deepest first at
+#: resume time.  ``front_end`` is cheap to recompute and ``pipelined`` is
+#: subsumed by the final-result cache, so neither is persisted.
+CACHED_STAGES = ("mapped", "placed", "routed")
 
 
 class CascadeCompiler:
@@ -169,6 +262,7 @@ class CascadeCompiler:
                  timing: Optional[TimingModel] = None,
                  energy: Optional[EnergyParams] = None,
                  cache: Optional[CompileCache] = None,
+                 stage_cache: Optional[CompileCache] = None,
                  batch_backend: str = "auto",
                  batch_workers: Optional[int] = None):
         if batch_backend not in BATCH_BACKENDS:
@@ -178,6 +272,12 @@ class CascadeCompiler:
         self.timing = timing or generate_timing_model(self.fabric)
         self.energy = energy or EnergyParams()
         self.cache = DEFAULT_CACHE if cache is None else cache
+        #: Stage-artifact tier: snapshots at the :data:`CACHED_STAGES`
+        #: boundaries, keyed by :func:`repro.core.cache.stage_key` prefix
+        #: hashes, so a compile differing only in later-stage knobs
+        #: resumes from the deepest shared artifact.
+        self.stage_cache = (DEFAULT_STAGE_CACHE if stage_cache is None
+                            else stage_cache)
         #: Defaults for ``compile_batch`` (drivers set these once instead of
         #: threading backend/worker args through every table function).
         self.batch_backend = batch_backend
@@ -192,25 +292,33 @@ class CascadeCompiler:
                 use_cache: bool = True,
                 pipeline: Optional[PassPipeline] = None,
                 _key: Optional[str] = None,
-                _skip_lookup: bool = False) -> CompileResult:
+                _skip_lookup: bool = False,
+                _point_map=None) -> CompileResult:
         """Run the pass pipeline for one (app, config) pair.
 
         With ``use_cache`` (default), deterministic repeats return the
-        memoized result (``result.cache_hit`` is set on the returned copy);
-        pass ``pipeline`` to override the schedule declared by the config.
-        The cache stores and serves deep copies, so callers may freely
-        mutate what they get back.  ``_key`` lets ``compile_batch`` reuse a
-        content hash it already computed; ``_skip_lookup`` skips the cache
-        probe (the batch driver already probed) while still storing the
-        result.
+        memoized result (``result.cache_hit`` is set on the returned copy)
+        and misses resume from the deepest cached :class:`StageArtifact`
+        whose prefix key matches (``pass_stats["stage_resume"]`` records
+        the boundary when that happens); pass ``pipeline`` to override the
+        schedule declared by the config (which also disables both cache
+        layers).  The cache stores and serves deep copies, so callers may
+        freely mutate what they get back.  ``_key`` lets ``compile_batch``
+        reuse a content hash it already computed; ``_skip_lookup`` skips
+        the cache probe (the batch driver already probed) while still
+        storing the result; ``_point_map`` fans the ``pareto_frontier``
+        pass's sweep points out to a worker pool.
         """
         cfg = config or PassConfig()
         t0 = time.time()
         key = None
-        if use_cache and self.cache is not None and pipeline is None:
+        app_fp = None
+        caching = use_cache and self.cache is not None and pipeline is None
+        if caching:
+            app_fp = app_fingerprint(app)
             key = _key or compile_key(app, cfg, self.fabric, self.timing,
                                       self.energy, unroll=unroll,
-                                      verify=verify)
+                                      verify=verify, app_fp=app_fp)
             if not _skip_lookup:
                 hit = self.cache.get(key)
                 if hit is not None:
@@ -218,18 +326,121 @@ class CascadeCompiler:
                                       compile_seconds=time.time() - t0)
         ctx = CompileContext(app=app, config=cfg, fabric=self.fabric,
                              timing=self.timing, energy=self.energy,
-                             unroll=unroll, verify=verify)
-        (pipeline or PassPipeline.from_config(cfg)).run(ctx)
+                             unroll=unroll, verify=verify,
+                             point_map=_point_map)
+        pipe = pipeline or PassPipeline.from_config(cfg)
+        self._run_staged(ctx, pipe, stage_caching=caching, app_fp=app_fp,
+                         unroll=unroll)
         result = CompileResult(
             app=app, config=cfg, design=ctx.design, sta=ctx.sta,
             schedule=ctx.schedule, power=ctx.power,
             pass_stats=ctx.pass_stats, post_pnr=ctx.post_pnr,
-            power_cap=ctx.power_cap, compile_seconds=time.time() - t0)
+            power_cap=ctx.power_cap, frontier=ctx.frontier,
+            compile_seconds=time.time() - t0)
         if key is not None:
             # store a private deep copy: the caller's mutations (and later
             # hitters') must never reach back into the cache entry
             self.cache.put(key, copy.deepcopy(result))
         return result
+
+    # -- staged execution --------------------------------------------------
+    def _stage_key(self, ctx: CompileContext, stage: str, prefix,
+                   unroll: Optional[int], app_fp: Optional[str]) -> str:
+        return stage_key(ctx.app, ctx.config, self.fabric, self.timing,
+                         self.energy, stage=stage, prefix=prefix,
+                         unroll=unroll, app_fp=app_fp)
+
+    def _run_staged(self, ctx: CompileContext, pipe: PassPipeline,
+                    stage_caching: bool, app_fp: Optional[str] = None,
+                    unroll: Optional[int] = None,
+                    until_stage: Optional[str] = None) -> Optional[str]:
+        """Drive ``pipe`` over ``ctx`` with stage-artifact resume/capture.
+
+        Probes the stage cache deepest-boundary-first and resumes from the
+        first hit; every :data:`CACHED_STAGES` boundary crossed afterwards
+        is snapshotted back into the cache.  ``until_stage`` stops at that
+        stage's boundary instead of finishing the schedule (the
+        ``compile_to_stage`` entry point).  Returns the resumed stage name
+        (``None`` for a cold run).
+        """
+        plan = stage_plan(pipe.names)
+        if plan is None and until_stage is not None:
+            raise ValueError(
+                f"schedule {pipe.names} has no stage structure "
+                f"(unregistered pass or out-of-order stages)")
+        boundary_of = dict(plan or [])
+        if until_stage is not None and until_stage not in boundary_of:
+            raise ValueError(f"stage {until_stage!r} not in schedule "
+                             f"{pipe.names} (stages: {sorted(boundary_of)})")
+        use_stages = (stage_caching and self.stage_cache is not None
+                      and plan is not None)
+        start, resumed = 0, None
+        skeys: Dict[str, str] = {}
+        if use_stages:
+            if app_fp is None:
+                app_fp = app_fingerprint(ctx.app)
+            probe = [(s, e) for s, e in plan if s in CACHED_STAGES]
+            if until_stage is not None:
+                limit = STAGE_ORDER.index(until_stage)
+                probe = [(s, e) for s, e in probe
+                         if STAGE_ORDER.index(s) <= limit]
+            for s, e in reversed(probe):
+                skeys[s] = self._stage_key(ctx, s, pipe.names[:e], unroll,
+                                           app_fp)
+                art = self.stage_cache.get(skeys[s])
+                if art is not None:
+                    art.restore_into(ctx)
+                    start, resumed = e, s
+                    ctx.pass_stats["stage_resume"] = s
+                    break
+
+        def on_boundary(stage: str, c: CompileContext) -> None:
+            if stage not in CACHED_STAGES:
+                return
+            if stage not in skeys:
+                skeys[stage] = self._stage_key(c, stage,
+                                               pipe.names[:boundary_of[stage]],
+                                               unroll, app_fp)
+            self.stage_cache.put(skeys[stage],
+                                 StageArtifact.capture(c, stage))
+
+        pipe.run(ctx, start=start,
+                 until=boundary_of[until_stage] if until_stage else None,
+                 on_boundary=on_boundary if use_stages else None)
+        return resumed
+
+    def compile_to_stage(self, app: AppSpec,
+                         config: Optional[PassConfig] = None,
+                         stage: str = "routed",
+                         unroll: Optional[int] = None,
+                         use_cache: bool = True) -> StageArtifact:
+        """Run (or resume) the flow up to ``stage`` and return its artifact.
+
+        The returned :class:`StageArtifact` is private to the caller (fork
+        it further at will); with ``use_cache`` the run both resumes from
+        and warms the stage tier, so warming the routed prefix for a sweep
+        is one call — and a repeat call is a single cache probe + fork,
+        with no pipeline run at all.
+        """
+        cfg = config or PassConfig()
+        pipe = PassPipeline.from_config(cfg)
+        if use_cache and self.stage_cache is not None \
+                and stage in CACHED_STAGES:
+            plan = stage_plan(pipe.names)
+            end = dict(plan or []).get(stage)
+            if end is not None:
+                skey = stage_key(app, cfg, self.fabric, self.timing,
+                                 self.energy, stage=stage,
+                                 prefix=pipe.names[:end], unroll=unroll)
+                hit = self.stage_cache.get(skey)
+                if hit is not None:
+                    return hit.fork()    # private copy; cache entry untouched
+        ctx = CompileContext(app=app, config=cfg, fabric=self.fabric,
+                             timing=self.timing, energy=self.energy,
+                             unroll=unroll)
+        self._run_staged(ctx, pipe, stage_caching=use_cache, unroll=unroll,
+                         until_stage=stage)
+        return StageArtifact.capture(ctx, stage)
 
     # -- batch compile -----------------------------------------------------
     def compile_batch(self, jobs: Iterable[CompileJob],
@@ -256,12 +467,21 @@ class CascadeCompiler:
         * ``"auto"`` (default) — ``"process"`` when more than one job
           misses every cache tier, else ``"thread"``.
 
+        Jobs whose config schedules the ``pareto_frontier`` pass with more
+        than one sweep point are *fanned out*: the shared prefix compiles
+        (or stage-cache-resumes) once in the parent, and the individual
+        (budget, cap) points become sub-jobs on the chosen backend, merged
+        parent-side into the job's ``ParetoFrontier`` — same results as a
+        serial compile, sweep-point parallelism instead of job
+        parallelism.  A failing job or sweep point raises
+        :class:`BatchCompileError` naming the job index and app.
+
         Duplicate jobs (identical content hashes) compile once; repeat
         invocations are served from the cache (memory, then disk tier when
         attached).  ``backend``/``max_workers`` default to the compiler's
         ``batch_backend``/``batch_workers``; ``self.last_batch`` records
-        backend, worker count, and the hit/compile split for benchmark
-        reporting.
+        backend, worker count, the hit/compile split, and the fan-out
+        shape for benchmark reporting.
         """
         backend = backend or self.batch_backend
         if backend not in BATCH_BACKENDS:
@@ -308,22 +528,30 @@ class CascadeCompiler:
         cache_hits = len(results)
         misses = [i for i in owners if i not in results]
 
-        workers = max_workers or self.batch_workers or worker_count(len(norm))
+        # frontier fan-out jobs: the sweep points (not the jobs) are the
+        # parallelism, so they leave the normal worker paths
+        fan_points = {i: n for i in misses
+                      if (n := _frontier_fanout(norm[i][1])) > 1}
+        plain = [i for i in misses if i not in fan_points]
+
+        workers = max_workers or self.batch_workers or worker_count(
+            max(len(norm), sum(fan_points.values())))
         chosen = backend
         if chosen == "auto":
-            chosen = "process" if len(misses) > 1 else "thread"
+            effective = len(plain) + sum(fan_points.values())
+            chosen = "process" if effective > 1 else "thread"
 
         proc: List[int] = []
-        threaded: List[int] = list(misses)
+        threaded: List[int] = list(plain)
         inline_fallback = 0
-        if chosen == "process" and misses:
+        if chosen == "process" and plain:
             try:
                 pickle.dumps((self.fabric, self.timing, self.energy))
                 env_picklable = True
             except Exception:
                 env_picklable = False     # whole worker payload must cross
             proc, threaded = [], []
-            for i in misses:
+            for i in plain:
                 try:
                     if not env_picklable:
                         raise TypeError("compiler env not picklable")
@@ -346,20 +574,46 @@ class CascadeCompiler:
                 with ProcessPoolExecutor(
                         max_workers=min(workers, len(proc)),
                         mp_context=_process_context()) as ex:
-                    futs = {i: ex.submit(_compile_job_in_worker,
+                    futs = {i: ex.submit(_compile_job_in_worker, i,
                                          norm[i][0], norm[i][1], norm[i][2],
                                          verify, self.fabric, self.timing,
                                          self.energy)
                             for i in proc}
                     for i, fut in futs.items():
-                        blob = fut.result()
+                        try:
+                            blob = fut.result()
+                        except BatchCompileError:
+                            raise
+                        except Exception as e:
+                            raise _wrap_job_error(e, i, norm[i][0],
+                                                  "in process worker")
                         if keys[i] is not None:
                             # merge the worker's result into the parent's
                             # cache tiers (the worker itself is cache-less)
                             self.cache.put(keys[i], pickle.loads(blob))
                         results[i] = pickle.loads(blob)
+            # frontier jobs compile their prefix in the parent (stage tier
+            # warm across jobs) and fan the sweep points onto the backend
+            for i in fan_points:
+                try:
+                    results[i] = self.compile(
+                        norm[i][0], norm[i][1], unroll=norm[i][2],
+                        verify=verify, use_cache=use_cache, _key=keys[i],
+                        _skip_lookup=True,
+                        _point_map=self._pool_point_map(chosen, workers, i,
+                                                        norm[i][0].name))
+                except BatchCompileError:
+                    raise
+                except Exception as e:
+                    raise _wrap_job_error(e, i, norm[i][0],
+                                          "during frontier fan-out")
             for i, fut in tfuts.items():
-                results[i] = fut.result()
+                try:
+                    results[i] = fut.result()
+                except BatchCompileError:
+                    raise
+                except Exception as e:
+                    raise _wrap_job_error(e, i, norm[i][0], "in thread pool")
         finally:
             if tex is not None:
                 tex.shutdown(wait=True)
@@ -377,9 +631,65 @@ class CascadeCompiler:
             "cache_hits": cache_hits,
             "compiled": len(owners) - cache_hits,
             "inline_fallback": inline_fallback,
+            "explore_jobs": len(fan_points),
+            "explore_points": sum(fan_points.values()),
             "wall_seconds": round(time.time() - t0, 3),
         }
         return out
+
+    def _pool_point_map(self, backend: str, workers: int, job_index: int,
+                        app_name: str):
+        """A :data:`~repro.core.explore.PointMap` that fans sweep points
+        onto this batch's backend.
+
+        The process variant ships one pickle of the shared routed baseline
+        per point (workers run ``copy_design=False`` on their private
+        unpickled copy); anything unpicklable degrades to the serial map.
+        The thread variant deep-copies per point in-process.  Failures are
+        wrapped as :class:`BatchCompileError` naming the job and point.
+        """
+        def mapper(design, tm, energy, iterations, points, kwargs):
+            if backend == "process":
+                try:
+                    blob = pickle.dumps((design, tm, energy, iterations))
+                    pickle.dumps(kwargs)
+                except Exception:
+                    return map_points_serial(design, tm, energy, iterations,
+                                             points, kwargs)
+                with ProcessPoolExecutor(
+                        max_workers=min(workers, len(points)),
+                        mp_context=_process_context()) as ex:
+                    futs = [(p, ex.submit(_frontier_point_in_worker, blob,
+                                          p[0], p[1], kwargs, job_index,
+                                          app_name))
+                            for p in points]
+                    return [pickle.loads(self._point_result(f, p, job_index,
+                                                            app_name))
+                            for p, f in futs]
+            with ThreadPoolExecutor(
+                    max_workers=min(workers, len(points))) as ex:
+                futs = [(p, ex.submit(evaluate_candidate, design, tm, energy,
+                                      iterations, p[0], p[1],
+                                      copy_design=True, **kwargs))
+                        for p in points]
+                return [self._point_result(f, p, job_index, app_name)
+                        for p, f in futs]
+        return mapper
+
+    @staticmethod
+    def _point_result(fut, point, job_index: int, app_name: str):
+        try:
+            return fut.result()
+        except BatchCompileError:
+            raise
+        except Exception as e:
+            err = BatchCompileError(
+                f"batch job {job_index} (app {app_name!r}) frontier point "
+                f"(budget={point[0]}, cap={point[1]}) failed: "
+                f"{type(e).__name__}: {e}", job_index=job_index,
+                app_name=app_name)
+            err.__cause__ = e
+            raise err
 
 
 def compile_batch(jobs: Iterable[CompileJob],

@@ -10,30 +10,46 @@ declarative schedule, capturing per-pass wall time and stats.
 Adding a new technique is now: write a function, decorate it with
 ``@register_pass``, and name it in a schedule (``PassConfig.schedule`` or
 ``PassPipeline(...)``) — no edits to the driver.
+
+On top of the pass sequence sits an explicit **stage model**
+(:data:`STAGE_ORDER`): every registered pass belongs to one of
+``front_end -> mapped -> placed -> routed -> pipelined -> report``, and a
+:class:`StageArtifact` snapshots the full artifact state of a
+:class:`CompileContext` at any stage boundary.  Artifacts can be forked
+(independent deep copies) and restored into fresh contexts, which is what
+makes compiles *resumable*: the driver caches stage artifacts under
+prefix content hashes (:func:`repro.core.cache.stage_key`), so a compile
+whose config differs only in post-PnR knobs resumes from the cached
+routed design instead of repeating mapping/placement/routing — the
+mechanism behind the in-compile design-space exploration of
+:mod:`repro.core.explore`.
 """
 
 from __future__ import annotations
 
+import copy
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from .apps import AppSpec
 from .branch_delay import check_matched_netlist
 from .broadcast import broadcast_pipelining
 from .dfg import DFG
+from .explore import ExploreSpec, ParetoFrontier, PointMap, explore_frontier
 from .flush import add_soft_flush
 from .interconnect import Fabric
+from .metrics import DesignMetrics, evaluate_design
 from .netlist import Netlist, RoutedDesign, extract_netlist
 from .pipelining import compute_pipelining
 from .place import PlaceParams, place
 from .post_pnr import PostPnRParams, PostPnRResult, post_pnr_pipeline
-from .power import EnergyParams, PowerReport, power_report
+from .power import EnergyParams, PowerReport
 from .power_cap import PowerCapResult, power_capped_pipeline
 from .route import route
-from .schedule import Schedule, schedule_round2
+from .schedule import Schedule
 from .sim import equivalent
-from .sta import STAReport, analyze
+from .sta import STAReport
 from .timing_model import TimingModel, generate_timing_model
 from .unroll import max_copies, subfabric_for
 
@@ -61,6 +77,11 @@ class CompileContext:
     unroll: Optional[int] = None
     verify: bool = False
 
+    #: Optional pool-backed mapper for the ``pareto_frontier`` pass —
+    #: supplied by ``compile_batch`` so frontier points fan out as
+    #: sub-jobs; ``None`` means evaluate points serially in-process.
+    point_map: Optional[PointMap] = None
+
     # artifacts ------------------------------------------------------------
     graph: Optional[DFG] = None              # after "build"
     source_dfg: Optional[DFG] = None         # snapshot before extraction
@@ -72,6 +93,8 @@ class CompileContext:
     design: Optional[RoutedDesign] = None
     post_pnr: Optional[PostPnRResult] = None
     power_cap: Optional[PowerCapResult] = None
+    frontier: Optional[ParetoFrontier] = None
+    metrics: Optional[DesignMetrics] = None
     sta: Optional[STAReport] = None
     schedule: Optional[Schedule] = None
     power: Optional[PowerReport] = None
@@ -134,7 +157,8 @@ DEFAULT_SCHEDULE = (
     "compute_pipelining",
     "broadcast_pipelining",
     "soft_flush",
-    "pnr",
+    "place",
+    "route",
     "post_pnr",
     "match_check",
     "sta",
@@ -150,12 +174,157 @@ POWER_CAPPED_SCHEDULE = tuple(
     "power_capped_pipeline" if name == "post_pnr" else name
     for name in DEFAULT_SCHEDULE)
 
+#: The design-space-exploration flow: the post-PnR pass is replaced by a
+#: Pareto-frontier sweep over ``PassConfig.explore`` (budgets x caps); the
+#: report passes then describe the sweep's selected point.
+EXPLORE_SCHEDULE = tuple(
+    "pareto_frontier" if name == "post_pnr" else name
+    for name in DEFAULT_SCHEDULE)
+
 #: Declarative schedules by name — ``PassConfig.schedule`` may be one of
 #: these strings instead of an explicit pass-name tuple.
 NAMED_SCHEDULES: Dict[str, Sequence[str]] = {
     "default": DEFAULT_SCHEDULE,
     "power_capped": POWER_CAPPED_SCHEDULE,
+    "explore": EXPLORE_SCHEDULE,
 }
+
+
+# ---------------------------------------------------------------------------
+# the stage model: boundaries, config-field provenance, snapshot artifacts
+# ---------------------------------------------------------------------------
+
+#: Compile stages, in flow order.  Every registered pass belongs to one;
+#: a stage *boundary* is the point in a schedule after its last pass.
+STAGE_ORDER = ("front_end", "mapped", "placed", "routed", "pipelined",
+               "report")
+
+#: Which stage each built-in pass belongs to.  Custom registered passes
+#: are absent, which simply disables stage caching for schedules that
+#: name them (an unknown pass could mutate anything).
+STAGE_OF_PASS: Dict[str, str] = {
+    "build": "front_end",
+    "compute_pipelining": "mapped",
+    "broadcast_pipelining": "mapped",
+    "soft_flush": "mapped",
+    "place": "placed",
+    "route": "routed",
+    "pnr": "routed",                 # composite place+route (compat)
+    "post_pnr": "pipelined",
+    "power_capped_pipeline": "pipelined",
+    "pareto_frontier": "pipelined",
+    "match_check": "report",
+    "sta": "report",
+    "schedule_round2": "report",
+    "power": "report",
+    "verify": "report",
+}
+
+#: The *earliest* stage each ``PassConfig`` field influences.  A stage
+#: artifact's cache key (:func:`repro.core.cache.stage_key`) hashes every
+#: field whose stage is at or before the boundary — so two configs that
+#: differ only in later-stage knobs (e.g. post-PnR budgets, power caps,
+#: explore grids) share the routed artifact, while a field that feeds an
+#: earlier pass can never alias.  ``stage_key`` refuses configs with
+#: unmapped fields, and a field-audit test enforces the mapping covers
+#: the dataclass exactly, so forgetting to classify a new field is an
+#: error, not a stale-cache bug.  (``schedule`` is keyed through the
+#: resolved pass-name prefix instead of its raw value; ``post_pnr`` and
+#: ``compute_pipelining`` are front-end because the ``build`` pass picks
+#: the unroll factor from them.)
+CONFIG_FIELD_STAGE: Dict[str, str] = {
+    "compute_pipelining": "front_end",
+    "post_pnr": "front_end",
+    "low_unroll_dup": "front_end",
+    "schedule": "front_end",         # keyed via the resolved prefix
+    "rf_threshold": "mapped",
+    "broadcast_pipelining": "mapped",
+    "broadcast_fanout": "mapped",
+    "broadcast_arity": "mapped",
+    "harden_flush": "mapped",
+    "placement_alpha": "placed",
+    "placement_gamma": "placed",
+    "seed": "placed",
+    "place_moves": "placed",
+    "post_pnr_budget": "pipelined",
+    "post_pnr_iters": "pipelined",
+    "power_cap_mw": "pipelined",
+    "explore": "pipelined",
+}
+
+
+def stage_plan(schedule_names: Sequence[str]
+               ) -> Optional[List[Tuple[str, int]]]:
+    """Map a schedule to its stage boundaries: ``[(stage, end_index)]``.
+
+    ``end_index`` is the schedule position just past the stage's last
+    pass, i.e. ``schedule_names[:end_index]`` is the prefix a
+    :class:`StageArtifact` for that stage embodies.  Returns ``None`` —
+    stage caching disabled — when the schedule names a pass with no stage
+    assignment, or runs stages out of flow order (a snapshot of such a
+    schedule would not mean what the stage name promises).
+    """
+    stages: List[str] = []
+    for name in schedule_names:
+        s = STAGE_OF_PASS.get(name)
+        if s is None:
+            return None
+        stages.append(s)
+    idxs = [STAGE_ORDER.index(s) for s in stages]
+    if idxs != sorted(idxs):
+        return None
+    plan: List[Tuple[str, int]] = []
+    for i, s in enumerate(stages):
+        if plan and plan[-1][0] == s:
+            plan[-1] = (s, i + 1)
+        else:
+            plan.append((s, i + 1))
+    return plan
+
+
+#: The :class:`CompileContext` fields a :class:`StageArtifact` snapshots —
+#: everything the passes produce (inputs like app/config/fabric stay with
+#: the context the artifact is restored into).
+ARTIFACT_FIELDS = (
+    "unroll", "graph", "source_dfg", "copies", "netlist", "place_fabric",
+    "place_timing", "placement", "design", "post_pnr", "power_cap",
+    "frontier", "metrics", "sta", "schedule", "power",
+    "pass_stats", "pass_times", "executed",
+)
+
+
+@dataclass
+class StageArtifact:
+    """A snapshot of a compile at a stage boundary, fit for fork/resume.
+
+    ``state`` is one deep copy of every artifact field taken *jointly*,
+    so intra-artifact aliasing survives (``design.netlist`` is the same
+    object as the ``netlist`` field, exactly as in a live context — the
+    post-PnR loop depends on that).  ``restore_into`` hands the receiving
+    context another joint deep copy, so one artifact can seed any number
+    of independent compiles; ``fork`` produces a sibling artifact that
+    shares nothing.  This generalizes
+    :class:`~repro.core.post_pnr.DesignCheckpoint` — which rewinds only
+    the register state the pipelining loop mutates — into the fork point
+    for *any* post-boundary exploration.
+    """
+
+    stage: str
+    prefix: Tuple[str, ...]          # the executed pass names snapshotted
+    state: Dict[str, object] = field(default_factory=dict)
+
+    @classmethod
+    def capture(cls, ctx: "CompileContext", stage: str) -> "StageArtifact":
+        state = copy.deepcopy({f: getattr(ctx, f) for f in ARTIFACT_FIELDS})
+        return cls(stage=stage, prefix=tuple(ctx.executed), state=state)
+
+    def fork(self) -> "StageArtifact":
+        return StageArtifact(stage=self.stage, prefix=self.prefix,
+                             state=copy.deepcopy(self.state))
+
+    def restore_into(self, ctx: "CompileContext") -> None:
+        for f, v in copy.deepcopy(self.state).items():
+            setattr(ctx, f, v)
 
 
 def resolve_schedule(schedule) -> Sequence[str]:
@@ -202,18 +371,40 @@ class PassPipeline:
     def names(self) -> List[str]:
         return [p.name for p in self.passes]
 
-    def run(self, ctx: CompileContext) -> CompileContext:
-        for p in self.passes:
-            if not p.enabled(ctx):
-                continue
-            t0 = time.perf_counter()
-            stats = p.run(ctx)
-            ctx.pass_times[p.name] = time.perf_counter() - t0
-            ctx.executed.append(p.name)
-            if stats is not None and p.stats_key is not None:
-                ctx.pass_stats[p.stats_key] = stats
-        ctx.pass_stats["pipeline"] = list(ctx.executed)
-        ctx.pass_stats["pass_times"] = dict(ctx.pass_times)
+    def run(self, ctx: CompileContext, start: int = 0,
+            until: Optional[int] = None,
+            on_boundary: Optional[Callable[[str, CompileContext], None]]
+            = None) -> CompileContext:
+        """Run passes ``[start:until)`` (the whole schedule by default).
+
+        ``start``/``until`` are schedule positions — stage boundary
+        indices from :func:`stage_plan` — so the driver can resume a
+        context restored from a :class:`StageArtifact` (``start`` = the
+        artifact's boundary) or stop at one (``until``).  ``on_boundary``
+        is invoked as ``(stage, ctx)`` after the last pass of each stage,
+        which is where the driver captures artifacts.  The summary
+        ``pass_stats`` keys are stamped only on runs that reach the end
+        of the schedule.
+        """
+        boundaries: Dict[int, str] = {}
+        if on_boundary is not None:
+            boundaries = {end: stage
+                          for stage, end in (stage_plan(self.names) or [])}
+        stop = len(self.passes) if until is None else until
+        for idx in range(start, stop):
+            p = self.passes[idx]
+            if p.enabled(ctx):
+                t0 = time.perf_counter()
+                stats = p.run(ctx)
+                ctx.pass_times[p.name] = time.perf_counter() - t0
+                ctx.executed.append(p.name)
+                if stats is not None and p.stats_key is not None:
+                    ctx.pass_stats[p.stats_key] = stats
+            if idx + 1 in boundaries:
+                on_boundary(boundaries[idx + 1], ctx)
+        if until is None:
+            ctx.pass_stats["pipeline"] = list(ctx.executed)
+            ctx.pass_stats["pass_times"] = dict(ctx.pass_times)
         return ctx
 
 
@@ -269,9 +460,8 @@ def _soft_flush(ctx: CompileContext):
     return add_soft_flush(ctx.graph)
 
 
-@register_pass("pnr", stats_key="pnr")
-def _pnr(ctx: CompileContext):
-    """Netlist extraction, criticality-driven placement (Eq. 1), routing."""
+def _run_place(ctx: CompileContext):
+    """Netlist extraction + criticality-driven placement (Eq. 1)."""
     ctx.require(graph=ctx.graph)
     app, cfg = ctx.app, ctx.config
     ctx.source_dfg = ctx.graph.copy()
@@ -287,14 +477,39 @@ def _pnr(ctx: CompileContext):
                      seed=cfg.seed, moves_per_node=cfg.place_moves)
     place_stats: dict = {}
     placement = place(nl, fabric, pp, stats=place_stats)
-    design = route(nl, placement, fabric)
-    design.unroll_copies = ctx.copies
-    design.source_dfg = ctx.source_dfg
     ctx.netlist, ctx.place_fabric, ctx.place_timing = nl, fabric, tm
-    ctx.placement, ctx.design = placement, design
+    ctx.placement = placement
     return {"fabric": fabric.name, "copies": ctx.copies,
             "nodes": len(nl.nodes), "branches": len(nl.branches),
             "place": place_stats}
+
+
+def _run_route(ctx: CompileContext):
+    """Tree routing with PathFinder-style overuse negotiation."""
+    ctx.require(netlist=ctx.netlist, placement=ctx.placement,
+                place_fabric=ctx.place_fabric)
+    design = route(ctx.netlist, ctx.placement, ctx.place_fabric)
+    design.unroll_copies = ctx.copies
+    design.source_dfg = ctx.source_dfg
+    ctx.design = design
+    return {"wirelength": design.total_wirelength(),
+            "routes": len(design.routes)}
+
+
+#: ``place`` keeps the historical ``"pnr"`` stats bucket (its dict carries
+#: the placement stats consumers read as ``pass_stats["pnr"]["place"]``).
+register_pass("place", stats_key="pnr")(_run_place)
+register_pass("route", stats_key="route")(_run_route)
+
+
+@register_pass("pnr", stats_key="pnr")
+def _pnr(ctx: CompileContext):
+    """Composite place+route — kept so explicit custom schedules written
+    against the pre-split flow keep working; the named schedules use the
+    separate ``place`` / ``route`` passes (distinct stage boundaries)."""
+    stats = _run_place(ctx)
+    stats["route"] = _run_route(ctx)
+    return stats
 
 
 def _post_pnr_params(ctx: CompileContext) -> PostPnRParams:
@@ -347,6 +562,42 @@ def _power_capped(ctx: CompileContext):
     return res.summary()
 
 
+@register_pass("pareto_frontier", stats_key="frontier",
+               gate=lambda ctx: ctx.config.post_pnr)
+def _pareto_frontier(ctx: CompileContext):
+    """In-compile design-space exploration (beyond the paper).
+
+    Sweeps post-PnR pipelining across ``PassConfig.explore``'s grid of
+    (register budget, power cap) points — each forked from the routed
+    design this pass receives, so the mapping/placement/routing prefix is
+    computed once for the whole sweep — prunes dominated points, and
+    materializes the selected point into the design the report passes
+    will describe.  Point evaluation goes through ``ctx.point_map`` when
+    the batch API supplies one (thread/process fan-out), else serial."""
+    ctx.require(design=ctx.design, place_timing=ctx.place_timing)
+    spec = ctx.config.explore
+    if spec is None:
+        # no grid declared: degenerate single-point sweep honouring the
+        # config's cap, so schedule="explore" never silently ignores it
+        spec = ExploreSpec(power_caps_mw=(ctx.config.power_cap_mw,))
+    elif ctx.config.power_cap_mw is not None:
+        raise ValueError(
+            "PassConfig.power_cap_mw and PassConfig.explore are mutually "
+            "exclusive under the 'explore' schedule — put the cap(s) in "
+            "ExploreSpec.power_caps_mw instead")
+    iters, stall = _iterations_and_stall(ctx)
+    base = _post_pnr_params(ctx)
+    fr = explore_frontier(ctx.design, ctx.place_timing, ctx.energy, iters,
+                          spec, stall_factor=stall,
+                          max_iters=base.max_iters,
+                          default_budget=base.register_budget,
+                          point_map=ctx.point_map)
+    ctx.frontier = fr
+    ctx.post_pnr = fr.selected.result.post_pnr
+    ctx.power_cap = fr.selected.result
+    return fr.summary()
+
+
 @register_pass("match_check", gate=lambda ctx: not ctx.app.sparse)
 def _match_check(ctx: CompileContext):
     """Invariant: branch delays must stay matched through the whole flow."""
@@ -356,27 +607,34 @@ def _match_check(ctx: CompileContext):
             f"{ctx.app.name}: branch delays unmatched after flow")
 
 
+def _metrics_of(ctx: CompileContext) -> DesignMetrics:
+    """The design's report metrics, computed (once) through the single
+    source of truth shared with the power-cap controller and the frontier
+    sweep — :func:`repro.core.metrics.evaluate_design`."""
+    if ctx.metrics is None:
+        ctx.require(design=ctx.design, place_timing=ctx.place_timing)
+        iters, stall = _iterations_and_stall(ctx)
+        ctx.metrics = evaluate_design(ctx.design, ctx.place_timing,
+                                      ctx.energy, iters, stall_factor=stall)
+    return ctx.metrics
+
+
 @register_pass("sta")
 def _sta(ctx: CompileContext):
     """Application-level static timing analysis (Section IV)."""
-    ctx.require(design=ctx.design, place_timing=ctx.place_timing)
-    ctx.sta = analyze(ctx.design, ctx.place_timing)
+    ctx.sta = _metrics_of(ctx).sta
 
 
 @register_pass("schedule_round2")
 def _schedule(ctx: CompileContext):
     """Second scheduling round over the pipelined design (Section VII)."""
-    ctx.require(design=ctx.design)
-    iters, stall = _iterations_and_stall(ctx)
-    ctx.schedule = schedule_round2(ctx.design, iters, stall_factor=stall)
+    ctx.schedule = _metrics_of(ctx).schedule
 
 
 @register_pass("power")
 def _power(ctx: CompileContext):
     """Power / energy / EDP report (Section VIII)."""
-    ctx.require(design=ctx.design, sta=ctx.sta, schedule=ctx.schedule)
-    ctx.power = power_report(ctx.design, ctx.sta.max_freq_mhz, ctx.schedule,
-                             ctx.energy)
+    ctx.power = _metrics_of(ctx).power
 
 
 @register_pass("verify", stats_key="verified",

@@ -52,6 +52,15 @@ class DesignCheckpoint:
             reg_hops={k: set(rb.reg_hops) for k, rb in design.routes.items()},
             n_regs={b.key: b.n_regs for b in design.netlist.branches})
 
+    def fork(self) -> "DesignCheckpoint":
+        """An independent copy: mutating one fork's sets/counts (or
+        restoring it onto a design that then keeps pipelining) can never
+        leak into its siblings.  Exploration passes fork one post-route
+        checkpoint per sweep point instead of re-capturing the design."""
+        return DesignCheckpoint(
+            reg_hops={k: set(v) for k, v in self.reg_hops.items()},
+            n_regs=dict(self.n_regs))
+
     def restore(self, design: RoutedDesign) -> None:
         for k, rb in design.routes.items():
             rb.reg_hops = set(self.reg_hops[k])

@@ -40,12 +40,12 @@ import math
 from dataclasses import dataclass, field
 from typing import List, Optional
 
+from .metrics import evaluate_design
 from .netlist import RoutedDesign
 from .post_pnr import (DesignCheckpoint, PostPnRParams, PostPnRResult,
                        post_pnr_pipeline)
-from .power import EnergyParams, power_report
-from .schedule import schedule_round2
-from .sta import STAReport, analyze
+from .power import EnergyParams
+from .sta import STAReport
 from .timing_model import TimingModel
 
 
@@ -106,19 +106,19 @@ def evaluate_point(design: RoutedDesign, tm: TimingModel,
                    round_index: int = 0) -> ParetoPoint:
     """Project (freq, power, EDP, registers) for the design's current state.
 
-    Uses the same ``analyze`` / ``schedule_round2`` / ``power_report``
-    chain as the final report passes, so the projection the cap controller
-    sees is exactly the number the compile result will report.  Pass
-    ``rep`` to reuse an STA report already computed for this state.
+    A thin wrapper over :func:`repro.core.metrics.evaluate_design` — the
+    single source of truth shared with the final report passes — so the
+    projection the cap controller sees is byte-identical to the number the
+    compile result will report.  Pass ``rep`` to reuse an STA report
+    already computed for this state.
     """
-    rep = rep if rep is not None else analyze(design, tm)
-    sched = schedule_round2(design, iterations, stall_factor=stall_factor)
-    pr = power_report(design, rep.max_freq_mhz, sched, energy)
+    m = evaluate_design(design, tm, energy, iterations,
+                        stall_factor=stall_factor, rep=rep)
     return ParetoPoint(round=round_index,
-                       critical_path_ns=rep.critical_path_ns,
-                       freq_mhz=rep.max_freq_mhz,
-                       power_mw=pr.power_mw,
-                       edp_js=pr.edp_js,
+                       critical_path_ns=m.critical_path_ns,
+                       freq_mhz=m.freq_mhz,
+                       power_mw=m.power_mw,
+                       edp_js=m.edp_js,
                        registers_added=design.netlist.added_registers())
 
 

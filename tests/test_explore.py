@@ -1,0 +1,421 @@
+"""Stage-artifact + design-space-exploration subsystem: prefix cache keys,
+resumable compiles, Pareto-frontier sweeps (byte-identical to independent
+compiles), batch fan-out, and the shared metric chain."""
+
+import copy
+import json
+from dataclasses import fields as dc_fields
+
+import pytest
+
+from repro.core import (ALL_APPS, CONFIG_FIELD_STAGE, BatchCompileError,
+                        CascadeCompiler, CompileCache, DesignMetrics,
+                        ExploreSpec, PassConfig, StageArtifact,
+                        evaluate_design, evaluate_point, stage_key,
+                        stage_plan)
+from repro.core.apps import AppSpec
+from repro.core.passes import (DEFAULT_SCHEDULE, EXPLORE_SCHEDULE,
+                               POWER_CAPPED_SCHEDULE, STAGE_OF_PASS)
+
+MOVES = 20
+APP = ALL_APPS["unsharp"]
+
+
+@pytest.fixture(scope="module")
+def compiler():
+    return CascadeCompiler(cache=CompileCache(), stage_cache=CompileCache())
+
+
+@pytest.fixture(scope="module")
+def uncapped(compiler):
+    return compiler.compile(APP, PassConfig.power_capped(None,
+                                                         place_moves=MOVES))
+
+
+def _spec_with_cap(uncapped):
+    """>= 4 (budget, cap) points, with a feasible mid-range cap."""
+    traj = uncapped.power_cap.trajectory
+    cap = (traj[0].power_mw + traj[-1].power_mw) / 2.0
+    return ExploreSpec(register_budgets=(4, 16, None),
+                       power_caps_mw=(cap, None))
+
+
+def _independent_config(budget, cap):
+    """The config an independent (non-explore) compile of this sweep point
+    would use."""
+    if cap is not None:
+        return PassConfig.power_capped(cap, post_pnr_budget=budget,
+                                       place_moves=MOVES)
+    return PassConfig.full(post_pnr_budget=budget, place_moves=MOVES)
+
+
+# ---------------------------------------------------------------------------
+# schedules and stage structure
+# ---------------------------------------------------------------------------
+
+
+def test_explore_schedule_shape():
+    assert EXPLORE_SCHEDULE == tuple(
+        "pareto_frontier" if n == "post_pnr" else n for n in DEFAULT_SCHEDULE)
+    assert "place" in DEFAULT_SCHEDULE and "route" in DEFAULT_SCHEDULE
+
+
+def test_stage_plan_boundaries():
+    plan = stage_plan(DEFAULT_SCHEDULE)
+    assert plan == [("front_end", 1), ("mapped", 4), ("placed", 5),
+                    ("routed", 6), ("pipelined", 7), ("report", 12)]
+    # all three named schedules share the physical-prefix boundaries
+    assert stage_plan(POWER_CAPPED_SCHEDULE)[:4] == plan[:4]
+    assert stage_plan(EXPLORE_SCHEDULE)[:4] == plan[:4]
+    # unknown passes or out-of-order stages disable stage caching
+    assert stage_plan(("build", "no_such_pass")) is None
+    assert stage_plan(("place", "build")) is None
+    # the composite pnr pass collapses placed/routed into one boundary
+    assert stage_plan(("build", "pnr", "sta")) == [
+        ("front_end", 1), ("routed", 2), ("report", 3)]
+
+
+def test_config_field_stage_covers_every_field_exactly():
+    """Every PassConfig field must have a stage assignment (else stage keys
+    could alias configs) and no stale assignments may linger."""
+    names = {f.name for f in dc_fields(PassConfig)}
+    assert set(CONFIG_FIELD_STAGE) == names
+    # every registered schedule pass has a stage
+    for sched in (DEFAULT_SCHEDULE, POWER_CAPPED_SCHEDULE, EXPLORE_SCHEDULE):
+        assert all(n in STAGE_OF_PASS for n in sched)
+
+
+def test_unmapped_config_field_refused():
+    from dataclasses import dataclass
+    from repro.core import Fabric, EnergyParams, generate_timing_model
+
+    @dataclass
+    class RogueConfig(PassConfig):
+        mystery_knob: int = 3
+
+    f = Fabric()
+    with pytest.raises(KeyError, match="mystery_knob"):
+        stage_key(APP, RogueConfig(), f, generate_timing_model(f),
+                  EnergyParams(), stage="routed",
+                  prefix=DEFAULT_SCHEDULE[:6])
+
+
+# ---------------------------------------------------------------------------
+# stage keys: sharing across post-PnR knobs, separation below them
+# ---------------------------------------------------------------------------
+
+
+def test_stage_key_shares_routed_prefix_across_post_pnr_knobs(compiler):
+    f, t, e = compiler.fabric, compiler.timing, compiler.energy
+    prefix = DEFAULT_SCHEDULE[:6]
+
+    def routed(cfg):
+        return stage_key(APP, cfg, f, t, e, stage="routed", prefix=prefix)
+
+    base = routed(PassConfig.full())
+    # post-PnR-only knobs share the routed artifact
+    assert routed(PassConfig.full(post_pnr_budget=8)) == base
+    assert routed(PassConfig.full(post_pnr_iters=7)) == base
+    assert routed(PassConfig(power_cap_mw=300.0)) == base
+    assert routed(PassConfig(explore=ExploreSpec(register_budgets=(1, 2)))) \
+        == base
+    # earlier-stage knobs do not
+    assert routed(PassConfig.full(seed=1)) != base
+    assert routed(PassConfig.full(placement_alpha=2.0)) != base
+    assert routed(PassConfig.full(rf_threshold=5)) != base
+    assert routed(PassConfig.full(low_unroll_dup=False)) != base
+    # a different prefix (composite pnr) or stage or app never aliases
+    assert stage_key(APP, PassConfig.full(), f, t, e, stage="routed",
+                     prefix=("build", "pnr")) != base
+    assert stage_key(APP, PassConfig.full(), f, t, e, stage="placed",
+                     prefix=DEFAULT_SCHEDULE[:5]) != base
+    assert stage_key(ALL_APPS["gaussian"], PassConfig.full(), f, t, e,
+                     stage="routed", prefix=prefix) != base
+
+
+def test_compile_resumes_from_routed_artifact(compiler, uncapped):
+    """Same app, different post-PnR knobs: the second compile must resume
+    from the cached routed design and still be byte-identical to a cold
+    compile of that config."""
+    s0 = compiler.stage_cache.stats()["hits"]
+    r = compiler.compile(APP, PassConfig.full(post_pnr_budget=8,
+                                              place_moves=MOVES))
+    assert r.pass_stats.get("stage_resume") == "routed"
+    assert compiler.stage_cache.stats()["hits"] == s0 + 1
+    cold = CascadeCompiler().compile(APP, PassConfig.full(
+        post_pnr_budget=8, place_moves=MOVES), use_cache=False)
+    assert json.dumps(r.summary()) == json.dumps(cold.summary())
+    assert r.design.placement == cold.design.placement
+    assert {k: sorted(rb.reg_hops) for k, rb in r.design.routes.items()} == \
+        {k: sorted(rb.reg_hops) for k, rb in cold.design.routes.items()}
+
+
+def test_compile_to_stage_artifact_roundtrip(compiler):
+    art = compiler.compile_to_stage(APP, PassConfig.full(place_moves=MOVES),
+                                    stage="routed")
+    assert art.stage == "routed"
+    # executed prefix: soft_flush is gated off by harden_flush=True
+    assert art.prefix == ("build", "compute_pipelining",
+                          "broadcast_pipelining", "place", "route")
+    assert art.state["design"] is not None
+    # intra-artifact aliasing: the design's netlist IS the netlist artifact
+    assert art.state["design"].netlist is art.state["netlist"]
+
+
+def test_stage_artifact_fork_is_fully_independent(compiler):
+    art = compiler.compile_to_stage(APP, PassConfig.full(place_moves=MOVES),
+                                    stage="routed")
+    f1, f2 = art.fork(), art.fork()
+    # mutate fork 1's pipelining state through its design
+    d1 = f1.state["design"]
+    for rb in d1.routes.values():
+        rb.branch.n_regs += 7
+        if rb.hops:
+            rb.reg_hops = set(range(len(rb.hops)))
+    def regs(a):
+        return [b.n_regs for b in a.state["design"].netlist.branches]
+    assert regs(f1) != regs(f2)
+    assert regs(f2) == regs(art)
+    # restoring each fork into fresh contexts yields independent designs
+    from repro.core.passes import CompileContext
+    c1 = CompileContext(app=APP, config=PassConfig.full(place_moves=MOVES),
+                        fabric=compiler.fabric, timing=compiler.timing,
+                        energy=compiler.energy)
+    f2.restore_into(c1)
+    c1.design.netlist.branches[0].n_regs = 99
+    assert f2.state["design"].netlist.branches[0].n_regs != 99
+
+
+# ---------------------------------------------------------------------------
+# the frontier: acceptance criteria
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def frontier_result(compiler, uncapped):
+    spec = _spec_with_cap(uncapped)
+    return spec, compiler.compile(APP, PassConfig.frontier(spec,
+                                                           place_moves=MOVES))
+
+
+def test_frontier_points_byte_identical_to_independent_compiles(
+        compiler, frontier_result):
+    """Acceptance: every sweep point's (freq, power, EDP, registers) must
+    equal — exactly, not approximately — an independent full compile with
+    that budget/cap."""
+    spec, r = frontier_result
+    fr = r.frontier
+    assert len(fr.all_points()) == len(spec.points()) >= 4
+    for budget, cap in spec.points():
+        pt = fr.point_for(budget, cap)
+        ind = compiler.compile(APP, _independent_config(budget, cap))
+        assert pt.freq_mhz == ind.sta.max_freq_mhz, (budget, cap)
+        assert pt.power_mw == ind.power.power_mw, (budget, cap)
+        assert pt.edp_js == ind.power.edp_js, (budget, cap)
+        assert pt.critical_path_ns == ind.sta.critical_path_ns, (budget, cap)
+        assert pt.registers_added == ind.design.netlist.added_registers(), \
+            (budget, cap)
+
+
+def test_frontier_returns_only_nondominated_points(frontier_result):
+    spec, r = frontier_result
+    front = r.frontier.points
+    assert front, "frontier must not be empty"
+    for p in front:
+        for q in front:
+            if p is q:
+                continue
+            # q must not dominate p
+            assert not ((q.freq_mhz >= p.freq_mhz
+                         and q.power_mw <= p.power_mw)
+                        and (q.freq_mhz > p.freq_mhz
+                             or q.power_mw < p.power_mw))
+    for d in r.frontier.dominated:
+        assert d.dominated
+        assert any(q.freq_mhz >= d.freq_mhz and q.power_mw <= d.power_mw
+                   and (q.freq_mhz > d.freq_mhz or q.power_mw < d.power_mw)
+                   for q in r.frontier.all_points())
+
+
+def test_selected_point_is_materialized_in_the_report(frontier_result):
+    spec, r = frontier_result
+    sel = r.frontier.selected
+    assert sel in r.frontier.points
+    assert sel.feasible
+    # min_edp selection
+    assert sel.edp_js == min(p.edp_js for p in r.frontier.points
+                             if p.feasible)
+    # the report passes describe exactly the selected point
+    assert r.sta.max_freq_mhz == sel.freq_mhz
+    assert r.power.power_mw == sel.power_mw
+    assert r.power.edp_js == sel.edp_js
+    assert r.design.netlist.added_registers() == sel.registers_added
+    assert r.power_cap is sel.result or \
+        r.power_cap.summary() == sel.result.summary()
+
+
+def test_capped_points_respect_their_cap(frontier_result):
+    spec, r = frontier_result
+    for p in r.frontier.all_points():
+        if p.power_cap_mw is not None and p.feasible:
+            assert p.power_mw <= p.power_cap_mw + 1e-9
+
+
+def test_frontier_result_caches_and_roundtrips(compiler, frontier_result):
+    spec, r = frontier_result
+    again = compiler.compile(APP, PassConfig.frontier(spec,
+                                                      place_moves=MOVES))
+    assert again.cache_hit
+    assert [p.scaled() for p in again.frontier.points] == \
+        [p.scaled() for p in r.frontier.points]
+
+
+def test_default_spec_degenerates_to_plain_flow(compiler):
+    """A one-point (None, None) sweep must reproduce the default schedule's
+    result exactly."""
+    plain = compiler.compile(APP, PassConfig.full(place_moves=MOVES))
+    one = compiler.compile(APP, PassConfig.frontier(place_moves=MOVES))
+    assert json.dumps(plain.summary()) == json.dumps(one.summary())
+    assert len(one.frontier.all_points()) == 1
+
+
+def test_explore_schedule_honours_config_power_cap(compiler, uncapped):
+    """schedule="explore" with no spec must not silently drop
+    PassConfig.power_cap_mw — the degenerate sweep carries the cap."""
+    traj = uncapped.power_cap.trajectory
+    cap = (traj[0].power_mw + traj[-1].power_mw) / 2.0
+    r = compiler.compile(APP, PassConfig(schedule="explore",
+                                         power_cap_mw=cap,
+                                         place_moves=MOVES))
+    assert r.frontier.spec.power_caps_mw == (cap,)
+    assert r.power.power_mw <= cap + 1e-9
+    capped = compiler.compile(APP, PassConfig.power_capped(cap,
+                                                           place_moves=MOVES))
+    assert r.power.power_mw == capped.power.power_mw
+    # cap + explicit grid together is ambiguous: refuse
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        compiler.compile(APP, PassConfig(schedule="explore",
+                                         power_cap_mw=cap,
+                                         explore=ExploreSpec(),
+                                         place_moves=MOVES))
+
+
+def test_compile_to_stage_repeat_is_pure_cache_fork(compiler):
+    """A repeat compile_to_stage must come straight from the stage cache
+    (no pipeline run) and still be aliasing-free."""
+    cfg = PassConfig.full(place_moves=MOVES)
+    a1 = compiler.compile_to_stage(APP, cfg, stage="routed")
+    h0 = compiler.stage_cache.stats()["hits"]
+    a2 = compiler.compile_to_stage(APP, cfg, stage="routed")
+    assert compiler.stage_cache.stats()["hits"] == h0 + 1
+    assert [b.n_regs for b in a1.state["design"].netlist.branches] == \
+        [b.n_regs for b in a2.state["design"].netlist.branches]
+    a2.state["design"].netlist.branches[0].n_regs = 77
+    a3 = compiler.compile_to_stage(APP, cfg, stage="routed")
+    assert a3.state["design"].netlist.branches[0].n_regs != 77
+
+
+def test_explore_spec_validation():
+    with pytest.raises(ValueError, match="objective"):
+        ExploreSpec(objectives=("freq_mhz", "nope")).validate()
+    with pytest.raises(ValueError, match="select"):
+        ExploreSpec(select="best_vibes").validate()
+    with pytest.raises(ValueError, match="at least one"):
+        ExploreSpec(register_budgets=()).validate()
+    assert ExploreSpec().validate().points() == [(None, None)]
+
+
+# ---------------------------------------------------------------------------
+# batch fan-out
+# ---------------------------------------------------------------------------
+
+
+def test_compile_batch_fans_out_frontier_points_thread(compiler,
+                                                       frontier_result):
+    spec, serial = frontier_result
+    c = CascadeCompiler(cache=CompileCache(),
+                        stage_cache=CompileCache())
+    (r,) = c.compile_batch([(APP, PassConfig.frontier(spec,
+                                                      place_moves=MOVES))],
+                           backend="thread")
+    assert c.last_batch["explore_jobs"] == 1
+    assert c.last_batch["explore_points"] == len(spec.points())
+    assert json.dumps(r.summary()) == json.dumps(serial.summary())
+    assert [p.scaled() for p in r.frontier.points] == \
+        [p.scaled() for p in serial.frontier.points]
+
+
+@pytest.mark.slow
+def test_compile_batch_fans_out_frontier_points_process(compiler,
+                                                        frontier_result):
+    spec, serial = frontier_result
+    c = CascadeCompiler(cache=CompileCache(), stage_cache=CompileCache())
+    (r,) = c.compile_batch([(APP, PassConfig.frontier(spec,
+                                                      place_moves=MOVES))],
+                           backend="process")
+    assert c.last_batch["explore_points"] == len(spec.points())
+    assert json.dumps(r.summary()) == json.dumps(serial.summary())
+    assert [p.scaled() for p in r.frontier.all_points()] == \
+        [p.scaled() for p in serial.frontier.all_points()]
+
+
+# ---------------------------------------------------------------------------
+# batch failure context
+# ---------------------------------------------------------------------------
+
+
+def _broken_builder(copy_idx, g, line_width):
+    raise ValueError("builder exploded")
+
+
+def test_batch_exception_names_job_and_app():
+    boom = AppSpec("boomapp", _broken_builder)
+    c = CascadeCompiler(cache=CompileCache(), stage_cache=CompileCache())
+    jobs = [(APP, PassConfig.full(place_moves=MOVES)), (boom, None)]
+    with pytest.raises(BatchCompileError) as ei:
+        c.compile_batch(jobs, backend="thread", use_cache=False)
+    assert ei.value.job_index == 1
+    assert ei.value.app_name == "boomapp"
+    assert "boomapp" in str(ei.value) and "job 1" in str(ei.value)
+
+
+def test_batch_exception_names_frontier_point(compiler, uncapped):
+    spec = ExploreSpec(register_budgets=(4, None),
+                       power_caps_mw=(None,), select="best_vibes")
+    c = CascadeCompiler(cache=CompileCache(), stage_cache=CompileCache())
+    with pytest.raises(BatchCompileError) as ei:
+        c.compile_batch([(APP, PassConfig.frontier(spec,
+                                                   place_moves=MOVES))],
+                        backend="thread")
+    assert ei.value.job_index == 0
+    assert ei.value.app_name == APP.name
+
+
+# ---------------------------------------------------------------------------
+# the shared metric chain (single source of truth)
+# ---------------------------------------------------------------------------
+
+
+def test_metric_chain_byte_identity_with_report_passes(compiler, uncapped):
+    """Regression: evaluate_point / evaluate_design and the report passes
+    must agree bit-for-bit — the controller and the tables can never
+    drift apart again."""
+    from repro.core import generate_timing_model
+    r = uncapped
+    tm = generate_timing_model(r.design.fabric)
+    iters = APP.iterations_for(r.design.unroll_copies)
+    m = evaluate_design(r.design, tm, compiler.energy, iters)
+    assert isinstance(m, DesignMetrics)
+    assert m.freq_mhz == r.sta.max_freq_mhz
+    assert m.critical_path_ns == r.sta.critical_path_ns
+    assert m.power_mw == r.power.power_mw
+    assert m.edp_js == r.power.edp_js
+    assert m.schedule.total_cycles == r.schedule.total_cycles
+    pt = evaluate_point(r.design, tm, compiler.energy, iters)
+    assert (pt.freq_mhz, pt.power_mw, pt.edp_js) == \
+        (m.freq_mhz, m.power_mw, m.edp_js)
+    # the controller's in-loop final point equals the reported numbers
+    pc = r.power_cap
+    assert pc.final.power_mw == r.power.power_mw
+    assert pc.final.freq_mhz == r.sta.max_freq_mhz
+    assert pc.final.edp_js == r.power.edp_js

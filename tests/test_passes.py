@@ -6,7 +6,7 @@ import json
 import pytest
 
 from repro.core import (ALL_APPS, DENSE_APPS, CascadeCompiler, CompileCache,
-                        PassConfig, PassPipeline, compile_key)
+                        ExploreSpec, PassConfig, PassPipeline, compile_key)
 from repro.core.cache import app_fingerprint, dfg_fingerprint
 from repro.core.dfg import DFG, INPUT, OUTPUT, PE, REG, RF
 from repro.core.passes import DEFAULT_SCHEDULE, PASS_REGISTRY, register_pass
@@ -121,11 +121,12 @@ def test_executed_passes_match_config_gates():
     full = c.compile(app, PassConfig.full(place_moves=20))
     unpip = c.compile(app, PassConfig.unpipelined(place_moves=20))
     assert full.pass_stats["pipeline"] == [
-        "build", "compute_pipelining", "broadcast_pipelining", "pnr",
-        "post_pnr", "match_check", "sta", "schedule_round2", "power"]
+        "build", "compute_pipelining", "broadcast_pipelining", "place",
+        "route", "post_pnr", "match_check", "sta", "schedule_round2",
+        "power"]
     # unpipelined: no pipelining passes, but the soft flush baseline runs
     assert unpip.pass_stats["pipeline"] == [
-        "build", "soft_flush", "pnr", "match_check", "sta",
+        "build", "soft_flush", "place", "route", "match_check", "sta",
         "schedule_round2", "power"]
     # per-pass wall time captured for exactly the executed passes
     for r in (full, unpip):
@@ -237,11 +238,53 @@ def test_compile_key_covers_every_config_field():
             f"PassConfig.{f.name} does not affect the compile key"
     # all perturbations are pairwise distinct too
     assert len(set(keys.values())) == len(keys)
-    # the two fields this PR added, explicitly
+    # fields added by recent PRs, explicitly
     assert compile_key(app, replace(base_cfg, power_cap_mw=300.0),
                        c.fabric, c.timing, c.energy) != base
     assert compile_key(app, replace(base_cfg, schedule="power_capped"),
                        c.fabric, c.timing, c.energy) != base
+    assert compile_key(app, replace(base_cfg, explore=ExploreSpec()),
+                       c.fabric, c.timing, c.energy) != base
+
+
+def test_compile_key_covers_every_explore_spec_subfield():
+    """Regression: every ExploreSpec sub-field — including any added in
+    the future — must participate in the compile-cache content hash, so
+    two frontier configs can never silently alias in the cache."""
+    from dataclasses import fields as dc_fields, replace
+
+    c = CascadeCompiler()
+    app = ALL_APPS["unsharp"]
+    base_spec = ExploreSpec()
+    base_cfg = PassConfig.frontier(base_spec)
+    base = compile_key(app, base_cfg, c.fabric, c.timing, c.energy)
+
+    def perturb(value):
+        if isinstance(value, bool):
+            return not value
+        if isinstance(value, (int, float)):
+            return value + 1
+        if isinstance(value, str):
+            return value + "_x"
+        if isinstance(value, tuple):
+            return value + ("x",)
+        return "__perturbed__"
+
+    keys = {None: base}
+    for f in dc_fields(ExploreSpec):
+        spec = replace(base_spec,
+                       **{f.name: perturb(getattr(base_spec, f.name))})
+        cfg = replace(base_cfg, explore=spec)
+        keys[f.name] = compile_key(app, cfg, c.fabric, c.timing, c.energy)
+        assert keys[f.name] != base, \
+            f"ExploreSpec.{f.name} does not affect the compile key"
+    assert len(set(keys.values())) == len(keys)
+    # grids that differ only in point *order* are distinct compiles too
+    k1 = compile_key(app, replace(base_cfg, explore=ExploreSpec(
+        register_budgets=(4, 8))), c.fabric, c.timing, c.energy)
+    k2 = compile_key(app, replace(base_cfg, explore=ExploreSpec(
+        register_budgets=(8, 4))), c.fabric, c.timing, c.energy)
+    assert k1 != k2
 
 
 def test_app_fingerprint_is_content_hash():

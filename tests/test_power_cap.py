@@ -39,7 +39,7 @@ def test_named_schedule_resolution():
     assert resolve_schedule("default") == DEFAULT_SCHEDULE
     assert resolve_schedule("power_capped") == POWER_CAPPED_SCHEDULE
     assert resolve_schedule(("build", "pnr")) == ("build", "pnr")
-    assert set(NAMED_SCHEDULES) == {"default", "power_capped"}
+    assert set(NAMED_SCHEDULES) == {"default", "power_capped", "explore"}
     # the capped schedule is the default with post_pnr swapped out
     assert POWER_CAPPED_SCHEDULE == tuple(
         "power_capped_pipeline" if n == "post_pnr" else n
@@ -141,6 +141,42 @@ def test_checkpoint_roundtrip(compiler, uncapped):
     assert _reg_state(design) != before
     ckpt.restore(design)
     assert _reg_state(design) == before
+
+
+def test_checkpoint_forks_do_not_alias(compiler):
+    """capture -> mutate -> fork twice -> restore each fork independently:
+    forks must share no reg_hops sets / n_regs counts with each other or
+    with the parent checkpoint (the fork point the explore pass relies
+    on)."""
+    design = compiler.compile(ALL_APPS["unsharp"],
+                              PassConfig.full(place_moves=20)).design
+    captured = _reg_state(design)
+    ckpt = DesignCheckpoint.capture(design)
+    # mutate the live design after capture
+    for rb in design.routes.values():
+        rb.branch.n_regs += 2
+    f1, f2 = ckpt.fork(), ckpt.fork()
+    # mutating one fork's sets/counts leaks nowhere
+    for k in f1.reg_hops:
+        f1.reg_hops[k].add(10_000)
+    for k in f1.n_regs:
+        f1.n_regs[k] += 5
+    assert all(10_000 not in s for s in f2.reg_hops.values())
+    assert all(10_000 not in s for s in ckpt.reg_hops.values())
+    assert f2.n_regs == ckpt.n_regs
+    assert f1.n_regs != f2.n_regs
+    # restoring fork 2 rewinds the design to the captured state...
+    f2.restore(design)
+    assert _reg_state(design) == captured
+    # ...and keeps the design independent of the fork it came from
+    next(iter(design.routes.values())).branch.n_regs += 7
+    assert f2.n_regs == ckpt.n_regs
+    # each fork restores independently: f1's poisoned counts apply only
+    # where the design has matching branches
+    state_before_f1 = _reg_state(design)
+    f1_clean = ckpt.fork()
+    f1_clean.restore(design)
+    assert _reg_state(design) == captured != state_before_f1
 
 
 # ---------------------------------------------------------------------------
