@@ -1,0 +1,161 @@
+"""Multi-app fabric sharing benchmark: one packed fabric vs N separate ones.
+
+Packs 2-4 app mixes (dense and sparse) into disjoint sub-fabric regions of
+one fabric via ``compile_multi`` and compares against the status quo — each
+app compiled alone on its own full fabric:
+
+* shared-flush register savings (one hardened distribution network
+  amortized across residents vs one per fabric, paper Section VI),
+* fabric utilization of the packed design,
+* min-frequency degradation each resident pays for its smaller region.
+
+    PYTHONPATH=src python -m benchmarks.multi_app [--fast] [--mix NAME]
+        [--backend auto|thread|process] [--workers N] [--moves N]
+        [--bench-out BENCH_multi.json]
+
+Each run appends a record per mix to ``BENCH_multi.json`` so the packing
+trajectory is tracked across runs and PRs, like ``BENCH_pnr.json`` and
+``BENCH_frontier.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List, Optional
+
+from benchmarks._util import append_bench_record, print_batch_stats, print_csv
+from repro.core import (CascadeCompiler, CompileCache, MultiAppSpec,
+                        PassConfig)
+from repro.core.apps import ALL_APPS
+
+MOVES = 100
+FAST_MOVES = 40
+
+#: 2-4 app mixes, dense and sparse mixed (names index ``ALL_APPS``).
+MIXES: Dict[str, tuple] = {
+    "dense2": ("unsharp", "camera"),
+    "dense_sparse": ("unsharp", "vecadd"),
+    "sparse2": ("vecadd", "ttv"),
+    "quad": ("unsharp", "camera", "vecadd", "ttv"),
+}
+FAST_MIXES = ("dense_sparse",)
+
+
+def run_mix(mix: str, moves: int = MOVES, backend: str = "auto",
+            workers: Optional[int] = None,
+            bench_out: Optional[str] = "BENCH_multi.json") -> Dict[str, object]:
+    apps = [ALL_APPS[a] for a in MIXES[mix]]
+    cfg = PassConfig.full(place_moves=moves)
+
+    # each leg gets its own compiler with cold caches: the separate run
+    # must not warm the packed run's stage tier (or the comparison would
+    # be warm-vs-cold, overstating the packing advantage)
+    def fresh():
+        return CascadeCompiler(cache=CompileCache(),
+                               stage_cache=CompileCache(),
+                               batch_backend=backend, batch_workers=workers)
+
+    # -- status quo: each app alone on its own full fabric ----------------
+    sep_compiler = fresh()
+    t0 = time.perf_counter()
+    separate = sep_compiler.compile_batch([(a, cfg) for a in apps])
+    t_separate = time.perf_counter() - t0
+    print_batch_stats(sep_compiler, f"separate fabrics ({mix})")
+    sep_freq = {r.app.name: r.sta.max_freq_mhz for r in separate}
+
+    # -- packed: disjoint regions of one fabric, one shared flush ---------
+    compiler = fresh()
+    t0 = time.perf_counter()
+    packed = compiler.compile_multi(MultiAppSpec.of(*apps, config=cfg))
+    t_packed = time.perf_counter() - t0
+    print_batch_stats(compiler, f"packed fabric ({mix})")
+    # one source of truth for the N-separate-fabrics flush baseline
+    sep_flush_regs = packed.flush.registers_separate
+
+    rows: List[Dict] = []
+    for r in packed.results:
+        name = r.app.name
+        region = packed.regions[name]
+        degradation = 1.0 - r.sta.max_freq_mhz / sep_freq[name]
+        rows.append({
+            "app": name,
+            "region": f"{region.rows}x{region.cols}@c{region.col0}",
+            "freq_mhz": round(r.sta.max_freq_mhz, 1),
+            "freq_separate_mhz": round(sep_freq[name], 1),
+            "freq_degradation_pct": round(100 * degradation, 2),
+            "unroll_copies": r.design.unroll_copies,
+            "power_mw": round(r.power.power_mw, 1),
+        })
+    print_csv(rows, f"multi-app pack ({mix}): packed vs separate fabrics")
+
+    s = packed.summary
+    worst_degradation = max(r["freq_degradation_pct"] for r in rows)
+    print(f"[multi] {mix}: {len(apps)} residents | "
+          f"min freq {s['freq_mhz']:.1f} MHz (limited by "
+          f"{s['freq_limited_by']}) | utilization {s['utilization']:.1%} | "
+          f"flush registers {packed.flush.registers} shared vs "
+          f"{sep_flush_regs} separate "
+          f"(saves {packed.flush.register_savings}) | "
+          f"worst min-freq degradation {worst_degradation:.1f}% | "
+          f"packed {t_packed:.1f}s vs separate {t_separate:.1f}s")
+
+    record = {
+        "mix": mix, "apps": list(MIXES[mix]), "moves": moves,
+        "backend": compiler.last_batch.get("backend"),
+        "workers": compiler.last_batch.get("workers"),
+        "residents": len(apps),
+        "regions": {n: [r.row0, r.col0, r.rows, r.cols]
+                    for n, r in packed.regions.items()},
+        "fabric_freq_mhz": round(s["freq_mhz"], 2),
+        "freq_limited_by": s["freq_limited_by"],
+        "fabric_power_mw": round(s["power_mw"], 2),
+        "fabric_edp_js": s["edp_js"],
+        "utilization": s["utilization"],
+        "flush_fanout": packed.flush.fanout,
+        "flush_registers_shared": packed.flush.registers,
+        "flush_registers_separate": sep_flush_regs,
+        "flush_register_savings": packed.flush.register_savings,
+        "worst_freq_degradation_pct": worst_degradation,
+        "packed_seconds": round(t_packed, 3),
+        "separate_seconds": round(t_separate, 3),
+        "per_app": rows,
+    }
+    if bench_out:
+        append_bench_record(bench_out, record)
+    return record
+
+
+def run_all(fast: bool = False, backend: str = "auto",
+            workers: Optional[int] = None,
+            bench_out: Optional[str] = "BENCH_multi.json") -> Dict:
+    mixes = FAST_MIXES if fast else tuple(MIXES)
+    return {m: run_mix(m, moves=FAST_MOVES if fast else MOVES,
+                       backend=backend, workers=workers,
+                       bench_out=bench_out)
+            for m in mixes}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mix", default=None, choices=sorted(MIXES),
+                    help="run a single mix (default: all, or the fast set)")
+    ap.add_argument("--fast", action="store_true",
+                    help="one 2-app mix at reduced SA moves (CI smoke)")
+    ap.add_argument("--moves", type=int, default=None)
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto", "thread", "process"))
+    ap.add_argument("--workers", type=int, default=None)
+    ap.add_argument("--bench-out", default="BENCH_multi.json")
+    args = ap.parse_args()
+    moves = args.moves or (FAST_MOVES if args.fast else MOVES)
+    if args.mix:
+        run_mix(args.mix, moves=moves, backend=args.backend,
+                workers=args.workers, bench_out=args.bench_out)
+    else:
+        run_all(fast=args.fast, backend=args.backend, workers=args.workers,
+                bench_out=args.bench_out)
+
+
+if __name__ == "__main__":
+    main()

@@ -36,7 +36,8 @@ def main() -> None:
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="cascade|lm|roofline|pipeline|ablations|frontier")
+                    help="cascade|lm|roofline|pipeline|ablations|frontier|"
+                         "multi")
     ap.add_argument("--fast", action="store_true",
                     help="reduced SA move counts / sweep grids for a quick "
                          "smoke run (tables keep their shape, lose accuracy)")
@@ -95,6 +96,11 @@ def main() -> None:
     if args.only in (None, "frontier"):
         from benchmarks import frontier
         results["frontier"] = section("frontier", lambda: frontier.run_all(
+            fast=args.fast, backend=args.backend, workers=args.workers))
+
+    if args.only in (None, "multi"):
+        from benchmarks import multi_app
+        results["multi"] = section("multi", lambda: multi_app.run_all(
             fast=args.fast, backend=args.backend, workers=args.workers))
 
     if args.only in (None, "roofline"):

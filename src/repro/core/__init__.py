@@ -16,22 +16,27 @@ from .cache import (DEFAULT_CACHE, DEFAULT_STAGE_CACHE, CompileCache,
                     attach_stage_disk_cache, code_fingerprint, compile_key,
                     dfg_fingerprint, stage_key)
 from .compiler import (BATCH_BACKENDS, CACHED_STAGES, BatchCompileError,
-                       CascadeCompiler, CompileResult, PassConfig,
-                       compile_batch)
+                       CascadeCompiler, CompileResult, MultiAppSpec,
+                       PassConfig, compile_batch, compile_multi)
 from .config import (cache_dir, default_power_cap_mw, disk_cache_enabled,
                      env_flag, env_float, place_debug, worker_count)
 from .dfg import DFG
 from .explore import (ExploreSpec, FrontierPoint, ParetoFrontier,
                       evaluate_candidate, explore_frontier, pareto_prune)
-from .flush import add_soft_flush, remove_flush
-from .interconnect import Fabric, Hop, Tile
-from .metrics import DesignMetrics, evaluate_design
+from .flush import (SharedFlushReport, add_soft_flush,
+                    flush_network_registers, remove_flush, shared_flush,
+                    stateful_nodes)
+from .interconnect import Fabric, Hop, Region, SubFabric, Tile
+from .metrics import DesignMetrics, combine_metrics, evaluate_design
+from .multi import (MultiAppResult, PackingError, fabric_report,
+                    pack_regions, region_request, sink_tiles_by_app,
+                    validate_regions)
 from .netlist import Netlist, RoutedDesign, extract_netlist
 from .passes import (CONFIG_FIELD_STAGE, DEFAULT_SCHEDULE, EXPLORE_SCHEDULE,
-                     NAMED_SCHEDULES, PASS_REGISTRY, POWER_CAPPED_SCHEDULE,
-                     STAGE_OF_PASS, STAGE_ORDER, CompileContext, Pass,
-                     PassPipeline, StageArtifact, register_pass,
-                     resolve_schedule, stage_plan)
+                     MULTI_SCHEDULE, NAMED_SCHEDULES, PASS_REGISTRY,
+                     POWER_CAPPED_SCHEDULE, STAGE_OF_PASS, STAGE_ORDER,
+                     CompileContext, Pass, PassPipeline, StageArtifact,
+                     register_pass, resolve_schedule, stage_plan)
 from .pipelining import collapse_reg_chains, compute_pipelining, find_reg_chains
 from .place import PlaceParams, place, placement_stats
 from .post_pnr import PostPnRParams, post_pnr_pipeline
@@ -49,6 +54,11 @@ __all__ = [
     "ALL_APPS", "DENSE_APPS", "SPARSE_APPS", "AppSpec",
     "CascadeCompiler", "CompileResult", "PassConfig", "compile_batch",
     "BATCH_BACKENDS", "BatchCompileError",
+    "MultiAppSpec", "MultiAppResult", "compile_multi", "PackingError",
+    "Region", "SubFabric", "pack_regions", "region_request",
+    "validate_regions", "sink_tiles_by_app", "fabric_report",
+    "SharedFlushReport", "shared_flush", "flush_network_registers",
+    "stateful_nodes", "combine_metrics", "MULTI_SCHEDULE",
     "CompileCache", "DiskCache", "DEFAULT_CACHE", "DEFAULT_STAGE_CACHE",
     "attach_disk_cache", "attach_stage_disk_cache",
     "compile_key", "stage_key", "app_fingerprint", "dfg_fingerprint",

@@ -34,8 +34,11 @@ from .cache import (DEFAULT_CACHE, DEFAULT_STAGE_CACHE, CompileCache,
 from .config import worker_count
 from .explore import (ExploreSpec, ParetoFrontier, evaluate_candidate,
                       map_points_serial)
-from .interconnect import Fabric
-from .netlist import RoutedDesign
+from .flush import shared_flush
+from .interconnect import Fabric, Region
+from .multi import (MultiAppResult, fabric_report, pack_regions,
+                    sink_tiles_by_app, validate_regions)
+from .netlist import RoutedDesign, extract_netlist
 from .passes import (STAGE_ORDER, CompileContext, PassPipeline, StageArtifact,
                      resolve_schedule, stage_plan)
 from .post_pnr import PostPnRResult
@@ -78,10 +81,15 @@ class PassConfig:
     #: schedule); ``None`` falls back to the single-point default spec.
     explore: Optional[ExploreSpec] = None
     #: Pass schedule: ``None`` -> default flow; a named schedule string
-    #: (``"default"`` / ``"power_capped"`` / ``"explore"``, see
-    #: ``repro.core.passes.NAMED_SCHEDULES``); or an explicit tuple of
+    #: (``"default"`` / ``"power_capped"`` / ``"explore"`` / ``"multi"``,
+    #: see ``repro.core.passes.NAMED_SCHEDULES``); or an explicit tuple of
     #: registered pass names.
     schedule: Union[str, Tuple[str, ...], None] = None
+    #: Rectangular sub-fabric this app owns on a shared, multi-app fabric
+    #: (``None`` = the whole fabric).  Set by ``compile_multi``; placement
+    #: site pools and routing edge costs never leave it, and it keys the
+    #: placed/routed stage artifacts (but not the shared ``mapped`` ones).
+    region: Optional[Region] = None
 
     @classmethod
     def unpipelined(cls, **kw) -> "PassConfig":
@@ -136,6 +144,59 @@ class CompileResult:
 #: One batch job: ``(app, config)`` — optionally ``(app, config, unroll)``.
 CompileJob = Union[Tuple[AppSpec, Optional[PassConfig]],
                    Tuple[AppSpec, Optional[PassConfig], Optional[int]]]
+
+
+@dataclass
+class MultiAppSpec:
+    """N co-resident applications to pack onto one shared fabric.
+
+    ``jobs`` are ordinary ``(app, config)`` pairs (``None`` config means
+    the default full flow); ``regions`` optionally pins each app to an
+    explicit :class:`~repro.core.interconnect.Region` (parallel to
+    ``jobs``) instead of letting :func:`repro.core.multi.pack_regions`
+    size and pack the strips automatically.
+    """
+
+    jobs: Tuple[Tuple[AppSpec, Optional[PassConfig]], ...]
+    regions: Optional[Tuple[Region, ...]] = None
+    name: str = "multi"
+
+    @classmethod
+    def of(cls, *apps: AppSpec, config: Optional[PassConfig] = None,
+           **kw) -> "MultiAppSpec":
+        """Spec from bare apps sharing one config (or the default)."""
+        return cls(jobs=tuple((a, config) for a in apps), **kw)
+
+    def normalized(self) -> List[Tuple[AppSpec, PassConfig]]:
+        for job in self.jobs:
+            # accept compile_batch-style (app, config, None) 3-tuples, but
+            # reject an actual unroll override the pack would ignore
+            if len(job) > 2 and job[2] is not None:
+                raise ValueError(
+                    f"MultiAppSpec jobs are (app, config) pairs; per-job "
+                    f"unroll overrides are not supported (got "
+                    f"unroll={job[2]!r} for {job[0].name!r}) — set "
+                    f"AppSpec.unroll instead")
+        out = [(job[0], (job[1] if len(job) > 1 and job[1] is not None
+                         else PassConfig()))
+               for job in self.jobs]
+        names = [app.name for app, _ in out]
+        if len(set(names)) != len(names):
+            raise ValueError(f"resident app names must be unique: {names}")
+        if self.regions is not None and len(self.regions) != len(out):
+            raise ValueError(
+                f"{len(self.regions)} explicit regions for {len(out)} apps")
+        for app, cfg in out:
+            if cfg.region is not None:
+                raise ValueError(
+                    f"{app.name}: PassConfig.region is assigned by "
+                    f"compile_multi — use MultiAppSpec.regions to pin one")
+            if cfg.schedule not in (None, "default", "multi"):
+                raise ValueError(
+                    f"{app.name}: compile_multi runs the 'multi' schedule "
+                    f"per resident; schedule={cfg.schedule!r} would be "
+                    f"silently discarded — leave it unset")
+        return out
 
 #: ``compile_batch`` backends.  "auto" picks "process" when more than one
 #: job misses every cache tier (the only case where multi-core pays for the
@@ -442,6 +503,94 @@ class CascadeCompiler:
                          until_stage=stage)
         return StageArtifact.capture(ctx, stage)
 
+    # -- multi-app fabric sharing ------------------------------------------
+    def compile_multi(self, spec: Union[MultiAppSpec, Iterable[CompileJob]],
+                      verify: bool = False, use_cache: bool = True,
+                      backend: Optional[str] = None,
+                      max_workers: Optional[int] = None) -> MultiAppResult:
+        """Compile N apps into disjoint sub-fabrics of one shared fabric.
+
+        Each resident compiles through the ``"multi"`` named schedule with
+        its :class:`~repro.core.interconnect.Region` in the config, so its
+        placement sites and routing edges never leave the window it owns.
+        Resident configs are always hardened per-app (a co-resident does
+        not own a flush source; the pack provides the shared one), which
+        keeps ``region`` a pure placed-stage input — so a resident shares
+        ``mapped`` stage artifacts with the app's ordinary hardened
+        compiles (thread backend or warm in-memory/disk tiers; process
+        workers compile cold by design).  The residents then share exactly
+        one flush broadcast (:func:`repro.core.flush.shared_flush`),
+        hardened when every resident's *requested* config hardens (paper
+        Section VI), and the fabric-level summary reports freq = min over
+        residents with power/EDP summed at that shared clock
+        (:func:`repro.core.multi.fabric_report`).
+
+        A single app in a full-fabric region degenerates to an ordinary
+        ``compile()`` — same cache key, same metrics, byte-identical
+        result — so the multi driver is a strict superset of the
+        single-app flow.  (Its flush report is descriptive only: a soft
+        standalone compile already routes and times its own flush, so no
+        second model cap is applied.)  Per-app compiles go through
+        ``compile_batch`` (``backend``/``max_workers`` as there), so a
+        pack place-and-routes its residents on multiple cores.
+        """
+        if not isinstance(spec, MultiAppSpec):
+            # normalized() validates shape (incl. rejecting per-job unroll
+            # overrides) for both entry points
+            spec = MultiAppSpec(jobs=tuple(tuple(job) for job in spec))
+        jobs = spec.normalized()
+        names = [app.name for app, _ in jobs]
+        passthrough = (len(jobs) == 1 and
+                       (spec.regions is None
+                        or spec.regions[0].covers(self.fabric)))
+        if passthrough:
+            app, cfg = jobs[0]
+            results = [self.compile(app, cfg, verify=verify,
+                                    use_cache=use_cache)]
+            regions = [Region.full(self.fabric)]
+        else:
+            if spec.regions is not None:
+                regions = list(spec.regions)
+            else:
+                requests = []
+                for app, cfg in jobs:
+                    # size against the graph the resident will actually
+                    # place (hardened: no per-app __flush__ node) — this
+                    # also warms exactly the mapped artifact the resident
+                    # compile resumes from
+                    sizing_cfg = dc_replace(cfg, harden_flush=True)
+                    art = self.compile_to_stage(app, sizing_cfg,
+                                                stage="mapped",
+                                                use_cache=use_cache)
+                    requests.append((app.name,
+                                     extract_netlist(art.state["graph"])))
+                regions = pack_regions(self.fabric, requests)
+            validate_regions(self.fabric, regions, names)
+            # residents always harden their *own* flush: the pack provides
+            # the one shared source, and a mapped-stage soft_flush keyed on
+            # region would alias mapped stage artifacts (region is a
+            # placed-stage field)
+            rjobs = [(app, dc_replace(cfg, region=r, schedule="multi",
+                                      harden_flush=True))
+                     for (app, cfg), r in zip(jobs, regions)]
+            results = self.compile_batch(rjobs, verify=verify,
+                                         use_cache=use_cache,
+                                         backend=backend,
+                                         max_workers=max_workers)
+        designs = {r.app.name: r.design for r in results}
+        harden = all(cfg.harden_flush for _, cfg in jobs)
+        # a passthrough soft compile already routed + timed its own flush:
+        # tm=None keeps the model cap from double-charging it
+        flush = shared_flush(sink_tiles_by_app(designs), self.fabric,
+                             tm=None if passthrough else self.timing,
+                             harden=harden)
+        region_map = dict(zip(names, regions))
+        summary = fabric_report(results, region_map, self.fabric, flush,
+                                energy=self.energy)
+        return MultiAppResult(name=spec.name, fabric=self.fabric,
+                              regions=region_map, results=results,
+                              flush=flush, summary=summary)
+
     # -- batch compile -----------------------------------------------------
     def compile_batch(self, jobs: Iterable[CompileJob],
                       max_workers: Optional[int] = None,
@@ -697,3 +846,11 @@ def compile_batch(jobs: Iterable[CompileJob],
                   **kw) -> List[CompileResult]:
     """Module-level convenience: batch-compile with a (fresh) compiler."""
     return (compiler or CascadeCompiler()).compile_batch(jobs, **kw)
+
+
+def compile_multi(spec: Union[MultiAppSpec, Iterable[CompileJob]],
+                  compiler: Optional[CascadeCompiler] = None,
+                  **kw) -> MultiAppResult:
+    """Module-level convenience: fabric-sharing compile with a (fresh)
+    compiler — see :meth:`CascadeCompiler.compile_multi`."""
+    return (compiler or CascadeCompiler()).compile_multi(spec, **kw)

@@ -27,6 +27,7 @@ knob lives here and is re-exported from :mod:`repro.core`:
 from __future__ import annotations
 
 import os
+import warnings
 from pathlib import Path
 from typing import Optional
 
@@ -51,13 +52,22 @@ def cache_dir() -> Path:
 
 def worker_count(jobs: Optional[int] = None, cap: int = 8) -> int:
     """Batch worker count: ``CASCADE_WORKERS`` wins; otherwise min(cap, cpu
-    count), never more than ``jobs`` when given, always at least 1."""
+    count), never more than ``jobs`` when given, always at least 1.
+
+    The ``jobs`` clamp applies to the env path too — ``CASCADE_WORKERS=8``
+    with a 2-job batch still spawns 2 workers, not 8 idle ones — matching
+    the contract above (this used to leak the raw env value).
+    """
     env = os.environ.get("CASCADE_WORKERS")
     if env:
         try:
-            return max(1, int(env))
+            w = int(env)
         except ValueError:
-            pass
+            w = None
+        if w is not None:
+            if jobs is not None:
+                w = min(w, jobs)
+            return max(1, w)
     w = min(cap, os.cpu_count() or cap)
     if jobs is not None:
         w = min(w, jobs)
@@ -65,13 +75,22 @@ def worker_count(jobs: Optional[int] = None, cap: int = 8) -> int:
 
 
 def env_float(name: str, default: Optional[float] = None) -> Optional[float]:
-    """Float env var: unset, empty, or unparsable -> ``default``."""
+    """Float env var: unset or empty -> ``default``.
+
+    An *unparsable* value also falls back to ``default``, but with a
+    ``UserWarning`` naming the variable and the offending value — a typo
+    like ``CASCADE_POWER_CAP_MW=250mW`` must not silently compile uncapped.
+    """
     v = os.environ.get(name)
     if v is None or not v.strip():
         return default
     try:
         return float(v)
     except ValueError:
+        warnings.warn(
+            f"ignoring unparsable {name}={v!r} (not a float); "
+            f"falling back to default {default!r}",
+            UserWarning, stacklevel=2)
         return default
 
 

@@ -19,7 +19,7 @@ construction (regression-tested byte-identically in
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
+from typing import Dict, Mapping, Optional
 
 from .netlist import RoutedDesign
 from .power import EnergyParams, PowerReport, power_report
@@ -78,3 +78,51 @@ def evaluate_design(design: RoutedDesign, tm: TimingModel,
     sched = schedule_round2(design, iterations, stall_factor=stall_factor)
     pr = power_report(design, rep.max_freq_mhz, sched, energy)
     return DesignMetrics(sta=rep, schedule=sched, power=pr)
+
+
+def combine_metrics(per_app: Mapping[str, DesignMetrics],
+                    flush_critical_ns: Optional[float] = None,
+                    designs: Optional[Mapping[str, RoutedDesign]] = None,
+                    energy: Optional[EnergyParams] = None
+                    ) -> Dict[str, object]:
+    """Fabric-level rollup of co-resident apps (multi-app fabric sharing).
+
+    One shared fabric runs one clock: the achievable frequency is the
+    *minimum* over residents (further capped by a soft shared flush's
+    unbreakable path when ``flush_critical_ns`` is given), while power,
+    energy, and EDP — extensive quantities — sum across residents.
+
+    The per-app reports were each computed at their *own* maximum
+    frequency; summing those directly would charge a fast resident for
+    dynamic power it cannot dissipate on the slower shared clock.  With
+    ``designs`` + ``energy`` given, every resident's power report is
+    therefore re-evaluated at the combined clock before summing, so the
+    rollup is physically consistent with the one-clock premise.  Per-app
+    native frequencies stay visible so the degradation each resident pays
+    for co-residency is attributable.
+    """
+    if not per_app:
+        raise ValueError("combine_metrics needs at least one resident")
+    freqs = {name: m.freq_mhz for name, m in per_app.items()}
+    slowest = min(freqs, key=freqs.get)
+    freq = freqs[slowest]
+    flush_freq = (1e3 / flush_critical_ns
+                  if flush_critical_ns else None)
+    if flush_freq is not None and flush_freq < freq:
+        freq, slowest = flush_freq, "__flush__"
+    if designs is not None and energy is not None:
+        at_clock = {name: power_report(designs[name], freq,
+                                       per_app[name].schedule, energy)
+                    for name in per_app}
+    else:
+        at_clock = {name: m.power for name, m in per_app.items()}
+    return {
+        "residents": len(per_app),
+        "freq_mhz": freq,
+        "freq_limited_by": slowest,
+        "per_app_freq_mhz": freqs,
+        "power_mw": sum(p.power_mw for p in at_clock.values()),
+        "energy_j": sum(p.energy_j for p in at_clock.values()),
+        "edp_js": sum(p.edp_js for p in at_clock.values()),
+        "runtime_s": max(p.runtime_s for p in at_clock.values()),
+    }

@@ -1,0 +1,189 @@
+"""Multi-app fabric sharing — disjoint sub-fabrics, one shared flush.
+
+CGRA toolchains are evaluated almost exclusively single-app (arXiv:2502.19114)
+and the paper's own flow compiles one application per fabric.  This module
+opens the co-residency scenario: N applications (dense and sparse mixed)
+compile into disjoint rectangular :class:`~repro.core.interconnect.Region`
+windows of one :class:`~repro.core.interconnect.Fabric`, sharing exactly one
+resource — the hardened flush distribution network of paper Section VI, which
+has one source and fabric-wide destinations and is therefore the natural
+thing to amortize across residents (:func:`repro.core.flush.shared_flush`).
+
+The pieces:
+
+* :func:`pack_regions` — size each app's window from its mapped netlist
+  (:func:`~repro.core.unroll.subfabric_for`) and pack the fabric into
+  full-height, MEM-stride-aligned column strips.  Full height because IO
+  streams in from the north edge only: a vertically-stacked resident would
+  be IO-starved, so column strips are the *correct* rectangular packing for
+  this CGRA class, not a simplification.  Leftover column groups are dealt
+  round-robin so residents reclaim slack for low-unrolling stamps.
+* :func:`validate_regions` — in-bounds, stride-aligned, pairwise disjoint.
+* :class:`MultiAppResult` + :func:`fabric_report` — per-app compile results
+  (each an ordinary :class:`~repro.core.compiler.CompileResult`, cached
+  under its own content-hash key) plus the fabric-level rollup: frequency
+  is the minimum over residents (one shared clock), power/energy/EDP sum,
+  and tile utilization is accounted per region
+  (:func:`repro.core.metrics.combine_metrics`).
+
+The compile driver itself — :class:`~repro.core.compiler.MultiAppSpec` and
+``CascadeCompiler.compile_multi`` — lives in :mod:`repro.core.compiler`;
+the ``"multi"`` named schedule it runs per app is defined in
+:mod:`repro.core.passes` and reuses each app's existing ``mapped`` stage
+artifacts (regions key only the placed/routed stages).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .flush import SharedFlushReport, shared_flush, stateful_nodes
+from .interconnect import Fabric, Region, Tile
+from .metrics import DesignMetrics, combine_metrics
+from .netlist import Netlist, RoutedDesign
+from .unroll import subfabric_for
+
+
+class PackingError(ValueError):
+    """The requested apps do not fit the fabric as disjoint regions."""
+
+
+def region_request(nl: Netlist, fabric: Fabric) -> Tuple[int, int]:
+    """Minimal (rows, cols) window for one copy of ``nl`` on ``fabric``'s
+    column pattern (cols is a multiple of the MEM-column stride)."""
+    win = subfabric_for(nl, fabric)
+    return win.rows, win.cols
+
+
+def pack_regions(fabric: Fabric,
+                 requests: Sequence[Tuple[str, Netlist]]) -> List[Region]:
+    """Pack one full-height column strip per app, in request order.
+
+    Each app gets at least the minimal strip width its netlist needs;
+    leftover stride-aligned column groups are dealt round-robin so the
+    slack becomes low-unrolling stamp room instead of dead tiles.  Raises
+    :class:`PackingError` with the full demand breakdown when the fabric
+    is too narrow for the pack.
+    """
+    if not requests:
+        raise PackingError("pack_regions: no apps to pack")
+    stride = fabric.mem_col_stride
+    widths: List[int] = []
+    for name, nl in requests:
+        _, cols = region_request(nl, fabric)
+        widths.append(cols)
+    total = sum(widths)
+    if total > fabric.cols:
+        demand = ", ".join(f"{name}: {w} cols"
+                           for (name, _), w in zip(requests, widths))
+        raise PackingError(
+            f"apps need {total} columns, fabric {fabric.name} has "
+            f"{fabric.cols} ({demand})")
+    leftover = (fabric.cols - total) // stride
+    i = 0
+    while leftover > 0:
+        widths[i % len(widths)] += stride
+        leftover -= 1
+        i += 1
+    regions, col0 = [], 0
+    for w in widths:
+        regions.append(Region(0, col0, fabric.rows, w))
+        col0 += w
+    return regions
+
+
+def validate_regions(fabric: Fabric, regions: Sequence[Region],
+                     names: Sequence[str]) -> None:
+    """In-bounds, MEM-stride-aligned, pairwise-disjoint region check."""
+    if len(regions) != len(names):
+        raise PackingError(
+            f"{len(regions)} regions for {len(names)} apps")
+    stride = fabric.mem_col_stride
+    for name, r in zip(names, regions):
+        fabric.subregion(r)              # raises when out of bounds
+        if r.col0 % stride:
+            raise PackingError(
+                f"region of {name!r} starts at column {r.col0}, which is "
+                f"not aligned to the MEM-column stride {stride}")
+    for i in range(len(regions)):
+        for j in range(i + 1, len(regions)):
+            if regions[i].overlaps(regions[j]):
+                raise PackingError(
+                    f"regions of {names[i]!r} and {names[j]!r} overlap: "
+                    f"{regions[i]} vs {regions[j]}")
+
+
+def sink_tiles_by_app(designs: Dict[str, RoutedDesign]
+                      ) -> Dict[str, List[Tile]]:
+    """Each resident's flush destinations: the tiles of its stateful
+    placeable nodes (one placed stamp copy per app)."""
+    return {name: [d.placement[n] for n in stateful_nodes(d.netlist)]
+            for name, d in designs.items()}
+
+
+@dataclass
+class MultiAppResult:
+    """One fabric-sharing compile: N resident apps, one shared flush."""
+
+    name: str
+    fabric: Fabric
+    regions: Dict[str, Region]               # app name -> owned region
+    results: List                            # per-app CompileResult, in order
+    flush: SharedFlushReport
+    summary: Dict[str, object] = field(default_factory=dict)
+
+    def result_for(self, app_name: str):
+        for r in self.results:
+            if r.app.name == app_name:
+                return r
+        raise KeyError(f"no resident named {app_name!r}")
+
+    def per_app_rows(self) -> List[dict]:
+        """One summary row per resident (benchmark table shape)."""
+        rows = []
+        for r in self.results:
+            region = self.regions[r.app.name]
+            rows.append({
+                "app": r.app.name,
+                "region": f"{region.rows}x{region.cols}@c{region.col0}",
+                **r.summary(),
+            })
+        return rows
+
+
+def fabric_report(results: Sequence, regions: Dict[str, Region],
+                  fabric: Fabric, flush: SharedFlushReport,
+                  energy=None) -> dict:
+    """The fabric-level rollup of a pack (freq = min, power/EDP summed).
+
+    Frequency/power/EDP flow through the per-app report chains (each a
+    :func:`repro.core.metrics.evaluate_design` product) and are combined
+    by :func:`repro.core.metrics.combine_metrics` — with ``energy`` given,
+    every resident's power is re-evaluated at the shared fabric clock
+    before summing (one fabric, one clock); utilization counts the tiles
+    each resident's placed copy occupies, scaled by its stamp count.
+    """
+    per_app = {r.app.name: DesignMetrics(sta=r.sta, schedule=r.schedule,
+                                         power=r.power)
+               for r in results}
+    combined = combine_metrics(per_app, flush_critical_ns=flush.critical_ns,
+                               designs={r.app.name: r.design
+                                        for r in results},
+                               energy=energy)
+    occupied = 0
+    region_util: Dict[str, float] = {}
+    for r in results:
+        tiles = {t for t in r.design.placement.values() if t[0] >= 0}
+        used = len(tiles) * max(1, r.design.unroll_copies)
+        occupied += used
+        area = regions[r.app.name].area()
+        region_util[r.app.name] = round(used / area, 4) if area else 0.0
+    combined.update({
+        "utilization": round(occupied / (fabric.rows * fabric.cols), 4),
+        "region_utilization": region_util,
+        "registers": sum(r.design.physical_register_count()
+                         for r in results),
+        **flush.summary(),
+    })
+    return combined

@@ -42,7 +42,7 @@ import numpy as np
 
 from .config import place_debug
 from .dfg import FIFO, INPUT, MEM, OUTPUT, PE, RF
-from .interconnect import Fabric, Tile
+from .interconnect import Fabric, Region, Tile
 from .netlist import Netlist
 
 # node kinds -> tile class they occupy
@@ -134,11 +134,19 @@ def _net_cost_batch(pos: np.ndarray, term_mat: np.ndarray,
 
 def place(nl: Netlist, fabric: Fabric,
           params: Optional[PlaceParams] = None,
-          stats: Optional[dict] = None) -> Dict[str, Tile]:
+          stats: Optional[dict] = None,
+          region: Optional[Region] = None) -> Dict[str, Tile]:
     """Anneal a placement; returns node -> tile.
 
     ``stats`` (optional dict) is filled with kernel counters: mode, move /
     acceptance counts, resyncs, and wall-clock seconds.
+
+    ``region`` (multi-app fabric sharing) restricts the placement to a
+    rectangular window the application owns: the site pools — and therefore
+    every SA move proposal, on both the vectorized and the scalar kernel
+    path, which share them — are filtered to in-region tiles, so a move
+    outside the region is structurally rejected before it is ever scored.
+    A final containment assertion backstops the invariant.
     """
     p = params or PlaceParams()
     debug = place_debug() if p.debug is None else p.debug
@@ -153,11 +161,16 @@ def place(nl: Netlist, fabric: Fabric,
         "mem": fabric.mem_tiles(),
         "io": fabric.io_tiles() * IO_CAPACITY,
     }
+    if region is not None:
+        sites = {c: [t for t in ts if region.contains(t)]
+                 for c, ts in sites.items()}
     for c in ("pe", "mem", "io"):
         need = cls.count(c)
         if need > len(sites[c]):
+            where = (f"fabric {fabric.name}" if region is None
+                     else f"region {region} of fabric {fabric.name}")
             raise ValueError(
-                f"{nl.name}: needs {need} {c} sites, fabric {fabric.name} "
+                f"{nl.name}: needs {need} {c} sites, {where} "
                 f"has {len(sites[c])}")
     n_sites = np.array([len(sites[cls[i]]) for i in range(n)], dtype=np.int64)
 
@@ -291,8 +304,17 @@ def place(nl: Netlist, fabric: Fabric,
             "best_cost": float(best_cost),
             "place_seconds": time.perf_counter() - t_start,
         })
-    return {nets.names[i]: (int(best_pos[i, 0]), int(best_pos[i, 1]))
-            for i in range(n)}
+        if region is not None:
+            stats["region"] = (region.row0, region.col0,
+                               region.rows, region.cols)
+    out = {nets.names[i]: (int(best_pos[i, 0]), int(best_pos[i, 1]))
+           for i in range(n)}
+    if region is not None:
+        stray = sorted(nm for nm, t in out.items() if not region.contains(t))
+        if stray:
+            raise AssertionError(
+                f"{nl.name}: placement left region {region}: {stray[:5]}")
+    return out
 
 
 def placement_stats(nl: Netlist, placement: Dict[str, Tile],

@@ -15,10 +15,11 @@ sites).
 from __future__ import annotations
 
 import heapq
+import math
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Set, Tuple
 
-from .interconnect import Fabric, Hop, Tile, manhattan
+from .interconnect import Fabric, Hop, Region, Tile, manhattan
 from .netlist import Branch, Netlist, RoutedBranch, RoutedDesign
 
 
@@ -56,7 +57,13 @@ def _astar(fabric: Fabric, srcs: Dict[Tile, float], dst: Tile,
 
 
 def route(nl: Netlist, placement: Dict[str, Tile], fabric: Fabric,
-          params: Optional[RouteParams] = None) -> RoutedDesign:
+          params: Optional[RouteParams] = None,
+          region: Optional[Region] = None) -> RoutedDesign:
+    """Route every branch; with ``region`` (multi-app fabric sharing) the
+    routes are *fenced*: any edge that would cross the region boundary into
+    a foreign sub-fabric costs ``inf``, so A* never relaxes through it and
+    no hop of a resident's net can consume a neighbour's routing tracks.
+    A post-route containment check backstops the fence."""
     p = params or RouteParams()
     width_class = lambda w: 16 if w >= 16 else 1
 
@@ -71,6 +78,9 @@ def route(nl: Netlist, placement: Dict[str, Tile], fabric: Fabric,
 
     def edge_cost_fn(wc: int):
         def cost(a: Tile, b: Tile) -> float:
+            if region is not None and not (region.contains(a)
+                                           and region.contains(b)):
+                return math.inf          # region fence: foreign boundary
             key = (a, b, wc)
             cap = fabric.track_capacity(wc)
             over = max(0, usage.get(key, 0) + 1 - cap)
@@ -154,6 +164,12 @@ def route(nl: Netlist, placement: Dict[str, Tile], fabric: Fabric,
     for drv, paths in tree_paths.items():
         for b in by_driver[drv]:
             pth = paths[b.key]
+            if region is not None:
+                stray = [t for t in pth if not region.contains(t)]
+                if stray:
+                    raise RuntimeError(
+                        f"{nl.name}: route {drv} -> {b.sink} left region "
+                        f"{region} at {stray[:3]}")
             hops = [Hop(pth[i], pth[i + 1]) for i in range(len(pth) - 1)]
             rb = RoutedBranch(branch=b, hops=hops)
             rb.distribute_registers()

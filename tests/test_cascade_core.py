@@ -194,6 +194,7 @@ def test_sta_vs_sdf_simulation(compiler):
     assert sdf_mhz <= sta_mhz * 1.9           # and not wildly pessimistic
 
 
+@pytest.mark.slow            # two full PnR runs at 200 moves/node
 def test_placement_alpha_reduces_long_routes(compiler):
     """Eq. 1's criticality exponent: higher alpha -> shorter critical path
     (on average, fixed seed here)."""

@@ -66,6 +66,7 @@ def test_rules_context():
 # end-to-end jit train step on the (1,1) smoke mesh with real shardings
 
 
+@pytest.mark.slow            # jit of a full train step: seconds on 2 vCPUs
 def test_train_step_on_smoke_mesh():
     from repro.optim.adamw import AdamWConfig
     cfg = get_config("llama3-8b").smoke()

@@ -65,6 +65,7 @@ def test_smoke_train_step_no_nans(arch):
     assert bool(jnp.isfinite(loss2))
 
 
+@pytest.mark.slow          # ~30 s across archs: the worst fast-lane offender
 @pytest.mark.parametrize("arch", ARCH_NAMES)
 def test_prefill_decode_matches_forward(arch):
     cfg = get_config(arch).smoke()

@@ -290,15 +290,32 @@ def test_cache_dir_env_override(monkeypatch, tmp_path):
 def test_worker_count_env_override(monkeypatch):
     monkeypatch.setenv("CASCADE_WORKERS", "3")
     assert worker_count() == 3
-    assert worker_count(jobs=1) == 3               # explicit setting wins
     monkeypatch.setenv("CASCADE_WORKERS", "not-a-number")
     assert worker_count(jobs=2) <= 2               # falls back, job-clamped
     monkeypatch.delenv("CASCADE_WORKERS")
     assert 1 <= worker_count() <= 8
 
 
+def test_worker_count_env_clamped_to_jobs(monkeypatch):
+    """Regression: the env path must honour the docstring's "never more
+    than jobs" clamp — CASCADE_WORKERS=8 with a 2-job batch is 2 workers,
+    not 8 idle ones."""
+    monkeypatch.setenv("CASCADE_WORKERS", "8")
+    assert worker_count(jobs=2) == 2
+    assert worker_count(jobs=1) == 1
+    assert worker_count(jobs=16) == 8              # env still caps upward
+    assert worker_count() == 8                     # no jobs: env verbatim
+    monkeypatch.setenv("CASCADE_WORKERS", "0")
+    assert worker_count(jobs=4) == 1               # floor stays at 1
+
+
 def test_compile_batch_honours_cascade_workers(monkeypatch):
     monkeypatch.setenv("CASCADE_WORKERS", "2")
     c = CascadeCompiler(cache=CompileCache())
-    c.compile_batch([(ALL_APPS["vecadd"], PassConfig.full(place_moves=20))])
+    cfg = PassConfig.full(place_moves=20)
+    c.compile_batch([(ALL_APPS["vecadd"], cfg), (ALL_APPS["ttv"], cfg)])
     assert c.last_batch["workers"] == 2
+    # env value is still clamped to the job count (worker_count contract)
+    c2 = CascadeCompiler(cache=CompileCache())
+    c2.compile_batch([(ALL_APPS["vecadd"], cfg)])
+    assert c2.last_batch["workers"] == 1

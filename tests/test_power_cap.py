@@ -39,7 +39,8 @@ def test_named_schedule_resolution():
     assert resolve_schedule("default") == DEFAULT_SCHEDULE
     assert resolve_schedule("power_capped") == POWER_CAPPED_SCHEDULE
     assert resolve_schedule(("build", "pnr")) == ("build", "pnr")
-    assert set(NAMED_SCHEDULES) == {"default", "power_capped", "explore"}
+    assert set(NAMED_SCHEDULES) == {"default", "power_capped", "explore",
+                                    "multi"}
     # the capped schedule is the default with post_pnr swapped out
     assert POWER_CAPPED_SCHEDULE == tuple(
         "power_capped_pipeline" if n == "post_pnr" else n
