@@ -31,6 +31,31 @@ def print_batch_stats(compiler, label: str):
           f"compiled={b.get('compiled')} wall={b.get('wall_seconds')}s")
 
 
+def apply_pnr_backend(compiler, backend):
+    """Driver-side copy of ``--backend-pnr`` / ``CASCADE_PNR_BACKEND`` into
+    every job's ``PassConfig.pnr_backend`` (the compiler never reads the
+    env var itself, keeping cache keys faithful).  Wraps the compiler
+    instance's ``compile``/``compile_batch`` so the table modules stay
+    oblivious; ``backend=None`` is a no-op."""
+    if not backend:
+        return compiler
+    from dataclasses import replace
+
+    orig_compile = compiler.compile
+    orig_batch = compiler.compile_batch
+
+    def _compile(app, config, **kw):
+        return orig_compile(app, replace(config, pnr_backend=backend), **kw)
+
+    def _batch(jobs, **kw):
+        return orig_batch([(a, replace(c, pnr_backend=backend))
+                           for a, c in jobs], **kw)
+
+    compiler.compile = _compile
+    compiler.compile_batch = _batch
+    return compiler
+
+
 def append_bench_record(path: str, record: Dict) -> None:
     """Append one trajectory record to the ``BENCH_pnr.json`` file.
 

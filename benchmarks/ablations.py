@@ -16,7 +16,8 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional, Sequence
 
-from benchmarks._util import print_batch_stats, print_csv
+from benchmarks._util import (apply_pnr_backend, print_batch_stats,
+                              print_csv)
 from repro.core.apps import ALL_APPS
 from repro.core.compiler import CascadeCompiler, PassConfig
 
@@ -108,8 +109,11 @@ def cap_sweep(app: str = "unsharp",
 
 
 def run_all(fast: bool = False, backend: str = "auto",
-            workers: Optional[int] = None) -> Dict[str, List[Dict]]:
-    c = CascadeCompiler(batch_backend=backend, batch_workers=workers)
+            workers: Optional[int] = None,
+            backend_pnr: Optional[str] = None) -> Dict[str, List[Dict]]:
+    c = apply_pnr_backend(
+        CascadeCompiler(batch_backend=backend, batch_workers=workers),
+        backend_pnr)
     moves = FAST_MOVES if fast else MOVES
     out = {
         "alpha": alpha_sweep(compiler=c, moves=moves,

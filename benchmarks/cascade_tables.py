@@ -26,7 +26,7 @@ import numpy as np
 
 from typing import Optional
 
-from benchmarks._util import print_batch_stats, print_csv
+from benchmarks._util import apply_pnr_backend, print_batch_stats, print_csv
 from repro.core.apps import ALL_APPS, DENSE_APPS, SPARSE_APPS
 from repro.core.compiler import CascadeCompiler, PassConfig
 from repro.core.sta import sdf_simulate_fmax
@@ -218,9 +218,12 @@ def sparse_table(compiler: CascadeCompiler, moves: int = MOVES) -> List[Dict]:
 
 # versus-unpipelined sparse ratios (paper's abstract quotes both baselines)
 def run_all(fast: bool = False, backend: str = "auto",
-            workers: Optional[int] = None) -> Dict[str, List[Dict]]:
+            workers: Optional[int] = None,
+            backend_pnr: Optional[str] = None) -> Dict[str, List[Dict]]:
     moves = FAST_MOVES if fast else MOVES
-    c = CascadeCompiler(batch_backend=backend, batch_workers=workers)
+    c = apply_pnr_backend(
+        CascadeCompiler(batch_backend=backend, batch_workers=workers),
+        backend_pnr)
     t0 = time.time()
     out = {}
     for name, fn in (("sta_accuracy", sta_accuracy),

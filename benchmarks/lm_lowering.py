@@ -11,7 +11,8 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional
 
-from benchmarks._util import print_batch_stats, print_csv
+from benchmarks._util import (apply_pnr_backend, print_batch_stats,
+                              print_csv)
 from repro.configs import ARCHS
 from repro.core.compiler import CascadeCompiler, PassConfig
 from repro.core.lmmap import lower_block
@@ -21,9 +22,12 @@ FAST_MOVES = 40
 
 
 def run_all(fast: bool = False, backend: str = "auto",
-            workers: Optional[int] = None) -> List[Dict]:
+            workers: Optional[int] = None,
+            backend_pnr: Optional[str] = None) -> List[Dict]:
     moves = FAST_MOVES if fast else MOVES
-    c = CascadeCompiler(batch_backend=backend, batch_workers=workers)
+    c = apply_pnr_backend(
+        CascadeCompiler(batch_backend=backend, batch_workers=workers),
+        backend_pnr)
     archs = list(ARCHS.items())
     specs = {name: lower_block(cfg) for name, cfg in archs}
     jobs = [(specs[name], cfg_pass)

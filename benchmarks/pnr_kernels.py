@@ -1,0 +1,108 @@
+"""Head-to-head PnR kernel benchmark: numpy vs jax, per stage, per app.
+
+Times ``place()`` and ``route()`` separately for both kernel backends on
+the benchmark apps (largest first in the claims: harris x4), so the
+speedup is attributable to the stage, not the compile cache.  The jax
+placer is timed twice — cold (first call pays the XLA compile) and warm
+(the steady state ``compile_batch``/``explore_frontier`` fan-outs run in)
+— and the quality contract is *asserted*, not just printed: best-replica
+cost at or below the single-chain NumPy cost and wirelength at or below
+A*'s on every app.
+
+    PYTHONPATH=src python -m benchmarks.pnr_kernels [--fast]
+        [--bench-out BENCH_pnr.json]
+
+``benchmarks.run`` drives this as the ``pnr`` section and folds the rows
+into its ``BENCH_pnr.json`` trajectory record.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List, Optional
+
+from benchmarks._util import append_bench_record, print_csv
+
+#: (app, unroll) pairs, smallest to largest; harris x4 is the headline
+#: (the ISSUE's >= 5x place() criterion is checked against it).
+BENCH_APPS = (("gaussian", 1), ("camera", 2), ("harris", 1),
+              ("mttkrp", 2), ("harris", 4))
+FAST_APPS = (("gaussian", 1), ("harris", 4))
+SEED = 0
+
+
+def _measure(nl, fabric, backend: str) -> Dict:
+    from repro.core.place import PlaceParams, place
+    from repro.core.route import RouteParams, route
+
+    stats: dict = {}
+    t0 = time.perf_counter()
+    placement = place(nl, fabric, PlaceParams(seed=SEED, backend=backend),
+                      stats=stats)
+    t_place = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    design = route(nl, placement, fabric, RouteParams(backend=backend))
+    t_route = time.perf_counter() - t0
+    return {"place_s": t_place, "route_s": t_route,
+            "cost": stats["best_cost"],
+            "wirelength": design.total_wirelength(),
+            "replicas": stats.get("replicas")}
+
+
+def run_all(fast: bool = False) -> Dict:
+    from repro.core import ALL_APPS, devices
+    from repro.core.interconnect import Fabric
+    from repro.core.netlist import extract_netlist
+
+    fabric = Fabric()
+    rows: List[Dict] = []
+    for app, mult in (FAST_APPS if fast else BENCH_APPS):
+        nl = extract_netlist(ALL_APPS[app].build(mult))
+        np_run = _measure(nl, fabric, "numpy")
+        cold = _measure(nl, fabric, "jax")       # pays the XLA compile
+        warm = _measure(nl, fabric, "jax")
+        assert warm["cost"] <= np_run["cost"], (
+            f"{app}x{mult}: jax best-replica cost {warm['cost']:.1f} above "
+            f"single-chain numpy {np_run['cost']:.1f}")
+        assert warm["wirelength"] <= np_run["wirelength"], (
+            f"{app}x{mult}: jax wirelength {warm['wirelength']} above "
+            f"A* {np_run['wirelength']}")
+        rows.append({
+            "app": f"{app}x{mult}",
+            "nodes": len(nl.nodes),
+            "replicas": warm["replicas"],
+            "place_numpy_s": round(np_run["place_s"], 3),
+            "place_jax_cold_s": round(cold["place_s"], 3),
+            "place_jax_s": round(warm["place_s"], 3),
+            "place_speedup": round(np_run["place_s"] / warm["place_s"], 2),
+            "cost_numpy": round(np_run["cost"], 1),
+            "cost_jax": round(warm["cost"], 1),
+            "cost_ratio": round(warm["cost"] / np_run["cost"], 3),
+            "route_numpy_s": round(np_run["route_s"], 3),
+            "route_jax_s": round(warm["route_s"], 3),
+            "wl_numpy": np_run["wirelength"],
+            "wl_jax": warm["wirelength"],
+        })
+    print_csv(rows, "PnR kernels numpy-vs-jax (per-stage wall seconds)")
+    largest = rows[-1]
+    print(f"[pnr_kernels] {largest['app']}: place() "
+          f"{largest['place_speedup']}x warm "
+          f"(cost ratio {largest['cost_ratio']}) on "
+          f"{len(devices())} device(s)")
+    return {"devices": len(devices()), "apps": rows}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smallest + largest app only")
+    ap.add_argument("--bench-out", default="BENCH_pnr.json",
+                    help="trajectory file to append the stage table to")
+    args = ap.parse_args()
+    out = run_all(fast=args.fast)
+    append_bench_record(args.bench_out, {"pnr_kernels": out})
+
+
+if __name__ == "__main__":
+    main()

@@ -2,8 +2,13 @@
 beyond-paper benches.
 
     PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
-        [--backend auto|thread|process] [--workers N] [--no-disk-cache]
-        [--bench-out PATH]
+        [--backend auto|thread|process] [--backend-pnr scalar|numpy|jax]
+        [--workers N] [--no-disk-cache] [--bench-out PATH]
+
+``--backend-pnr`` (or ``CASCADE_PNR_BACKEND``) selects the place/route
+kernel backend the compile-heavy sections build their ``PassConfig`` with;
+the ``pnr`` section always benchmarks numpy vs jax head-to-head and folds
+the per-stage timing table into the trajectory record.
 
 Prints CSV blocks per artifact and a final band-check against the paper's
 headline claims.  Each run appends a record to ``BENCH_pnr.json`` —
@@ -31,13 +36,14 @@ def _band(name: str, lo, hi, values, allow_slack=0.0) -> str:
 
 def main() -> None:
     from repro.core import (BATCH_BACKENDS, DEFAULT_CACHE,
-                            DEFAULT_STAGE_CACHE, attach_disk_cache,
-                            attach_stage_disk_cache, worker_count)
+                            DEFAULT_STAGE_CACHE, PNR_BACKENDS,
+                            attach_disk_cache, attach_stage_disk_cache,
+                            pnr_backend, worker_count)
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="cascade|lm|roofline|pipeline|ablations|frontier|"
-                         "multi")
+                         "multi|pnr")
     ap.add_argument("--fast", action="store_true",
                     help="reduced SA move counts / sweep grids for a quick "
                          "smoke run (tables keep their shape, lose accuracy)")
@@ -51,7 +57,15 @@ def main() -> None:
                          "compiles)")
     ap.add_argument("--bench-out", default="BENCH_pnr.json",
                     help="PnR wall-clock trajectory file to append to")
+    ap.add_argument("--backend-pnr", default=None, choices=PNR_BACKENDS,
+                    help="place/route kernel backend for the compile "
+                         "sections (cascade/lm/ablations); default: "
+                         "CASCADE_PNR_BACKEND or each config's own "
+                         "(numpy).  The pnr section always runs both "
+                         "kernels head-to-head.")
     args = ap.parse_args()
+    backend_pnr = args.backend_pnr or (
+        pnr_backend() if os.environ.get("CASCADE_PNR_BACKEND") else None)
 
     if args.no_disk_cache:
         # also detach tiers CASCADE_DISK_CACHE=1 attached at import —
@@ -76,12 +90,14 @@ def main() -> None:
     if args.only in (None, "cascade"):
         from benchmarks import cascade_tables
         results.update(section("cascade", lambda: cascade_tables.run_all(
-            fast=args.fast, backend=args.backend, workers=args.workers)))
+            fast=args.fast, backend=args.backend, workers=args.workers,
+            backend_pnr=backend_pnr)))
 
     if args.only in (None, "lm"):
         from benchmarks import lm_lowering
         results["lm_lowering"] = section("lm", lambda: lm_lowering.run_all(
-            fast=args.fast, backend=args.backend, workers=args.workers))
+            fast=args.fast, backend=args.backend, workers=args.workers,
+            backend_pnr=backend_pnr))
 
     if args.only in (None, "pipeline"):
         from benchmarks import pipeline_partition
@@ -91,7 +107,8 @@ def main() -> None:
     if args.only in (None, "ablations"):
         from benchmarks import ablations
         results["ablations"] = section("ablations", lambda: ablations.run_all(
-            fast=args.fast, backend=args.backend, workers=args.workers))
+            fast=args.fast, backend=args.backend, workers=args.workers,
+            backend_pnr=backend_pnr))
 
     if args.only in (None, "frontier"):
         from benchmarks import frontier
@@ -106,6 +123,11 @@ def main() -> None:
     if args.only in (None, "roofline"):
         from benchmarks import roofline
         results["roofline"] = section("roofline", roofline.run_all)
+
+    if args.only in (None, "pnr"):
+        from benchmarks import pnr_kernels
+        results["pnr_kernels"] = section("pnr", lambda: pnr_kernels.run_all(
+            fast=args.fast))
 
     # ----- headline band checks (paper abstract) -------------------------
     if "dense_table" in results:
@@ -137,6 +159,7 @@ def main() -> None:
         "fast": args.fast,
         "only": args.only,
         "backend": args.backend,
+        "backend_pnr": backend_pnr,
         "workers": args.workers or worker_count(),
         "disk_cache": not args.no_disk_cache,
         "cpu_count": os.cpu_count(),
@@ -150,6 +173,10 @@ def main() -> None:
     cap_rows = (results.get("ablations") or {}).get("power_cap")
     if cap_rows:
         record["power_cap_sweep"] = cap_rows
+    # per-stage place/route kernel timings ride along so the speedup
+    # claim is attributable to the stage, not the cache
+    if results.get("pnr_kernels"):
+        record["pnr_kernels"] = results["pnr_kernels"]
     append_bench_record(args.bench_out, record)
 
 

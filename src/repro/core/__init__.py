@@ -18,8 +18,10 @@ from .cache import (DEFAULT_CACHE, DEFAULT_STAGE_CACHE, CompileCache,
 from .compiler import (BATCH_BACKENDS, CACHED_STAGES, BatchCompileError,
                        CascadeCompiler, CompileResult, MultiAppSpec,
                        PassConfig, compile_batch, compile_multi)
-from .config import (cache_dir, default_power_cap_mw, disk_cache_enabled,
-                     env_flag, env_float, place_debug, worker_count)
+from .config import (PNR_BACKENDS, cache_dir, default_power_cap_mw,
+                     devices, disk_cache_enabled, env_flag, env_float,
+                     force_host_device_count, host_device_count, place_debug,
+                     pnr_backend, worker_count)
 from .dfg import DFG
 from .explore import (ExploreSpec, FrontierPoint, ParetoFrontier,
                       evaluate_candidate, explore_frontier, pareto_prune)
@@ -65,6 +67,8 @@ __all__ = [
     "code_fingerprint",
     "cache_dir", "default_power_cap_mw", "disk_cache_enabled", "env_flag",
     "env_float", "place_debug", "worker_count",
+    "PNR_BACKENDS", "pnr_backend", "host_device_count",
+    "force_host_device_count", "devices",
     "CompileContext", "Pass", "PassPipeline", "PASS_REGISTRY",
     "DEFAULT_SCHEDULE", "POWER_CAPPED_SCHEDULE", "EXPLORE_SCHEDULE",
     "NAMED_SCHEDULES", "resolve_schedule", "register_pass", "find_reg_chains",

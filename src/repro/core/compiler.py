@@ -74,6 +74,15 @@ class PassConfig:
     harden_flush: bool = True
     seed: int = 0
     place_moves: int = 400            # per node
+    #: Place-and-route kernel backend (``repro.core.config.PNR_BACKENDS``:
+    #: ``"scalar"`` / ``"numpy"`` / ``"jax"``).  Drivers copy
+    #: ``CASCADE_PNR_BACKEND`` here — the compiler never reads the env var
+    #: itself — and it keys the ``placed``/``routed`` stage artifacts while
+    #: leaving the shared ``mapped`` prefix backend-agnostic.
+    pnr_backend: str = "numpy"
+    #: Parallel-tempering replica count for the jax placer (0 = the
+    #: size-adaptive default); ignored by the scalar/numpy backends.
+    pnr_replicas: int = 0
     #: Power budget (mW) for the ``power_capped_pipeline`` pass; ``None``
     #: means unconstrained (byte-identical to the plain post-PnR pass).
     power_cap_mw: Optional[float] = None

@@ -22,6 +22,18 @@ knob lives here and is re-exported from :mod:`repro.core`:
                          CLIs) and written into the ``PassConfig`` they
                          build — never read inside the compiler itself, so
                          the compile-cache key always reflects the cap.
+    CASCADE_PNR_BACKEND  default place-and-route kernel backend for the
+                         benchmark/driver CLIs: "scalar", "numpy", or
+                         "jax".  Driver-side only, like the power cap —
+                         drivers copy it into ``PassConfig.pnr_backend``,
+                         the compiler never reads it implicitly.
+    CASCADE_HOST_DEVICES host CPU device count exposed to JAX (the
+                         ``--xla_force_host_platform_device_count`` XLA
+                         flag, snippet-2/bayespec idiom) so the jax
+                         backend's parallel-tempering replicas shard
+                         across a multi-device mesh even on a CPU-only
+                         box.  Must take effect before jax initializes;
+                         ``force_host_device_count()`` applies it.
 """
 
 from __future__ import annotations
@@ -103,6 +115,108 @@ def default_power_cap_mw(default: Optional[float] = None) -> Optional[float]:
     the compiler never reads it implicitly, keeping cache keys faithful.
     """
     return env_float("CASCADE_POWER_CAP_MW", default)
+
+
+#: The place-and-route kernel backends (``PassConfig.pnr_backend`` /
+#: ``PlaceParams.backend`` / ``RouteParams.backend``).  ``scalar`` and
+#: ``numpy`` are the bit-identical SA/A* pair from PR 2; ``jax`` is the
+#: jitted parallel-tempering placer + batched wavefront router.
+PNR_BACKENDS = ("scalar", "numpy", "jax")
+
+
+def pnr_backend(default: str = "numpy") -> str:
+    """Default PnR kernel backend (``CASCADE_PNR_BACKEND``).
+
+    Driver-side only: benchmark CLIs and examples copy the value into the
+    ``PassConfig.pnr_backend`` they compile with — the compiler never
+    reads it implicitly, keeping cache keys faithful.  An unknown value
+    warns and falls back to ``default`` (a typo must not silently switch
+    kernels).
+    """
+    v = os.environ.get("CASCADE_PNR_BACKEND")
+    if v is None or not v.strip():
+        return default
+    v = v.strip().lower()
+    if v not in PNR_BACKENDS:
+        warnings.warn(
+            f"ignoring unknown CASCADE_PNR_BACKEND={v!r} "
+            f"(expected one of {PNR_BACKENDS}); falling back to "
+            f"{default!r}", UserWarning, stacklevel=2)
+        return default
+    return v
+
+
+def host_device_count(n: Optional[int] = None, cap: int = 8) -> int:
+    """Resolve the host device count for the JAX mesh.
+
+    ``CASCADE_HOST_DEVICES`` wins when set (explicit ``n`` beats it);
+    otherwise 1.  Like :func:`worker_count`, the result is clamped — to
+    ``cap`` and to at least 1 — and an unparsable env value warns rather
+    than silently meaning one device.  Values above the physical CPU
+    count are allowed (XLA happily time-slices virtual host devices; CI
+    forces a 2-device mesh on a 1-core box) but warn so a surprising
+    oversubscription is visible.
+    """
+    if n is None:
+        v = os.environ.get("CASCADE_HOST_DEVICES")
+        if v is None or not v.strip():
+            return 1
+        try:
+            n = int(v)
+        except ValueError:
+            warnings.warn(
+                f"ignoring unparsable CASCADE_HOST_DEVICES={v!r} "
+                f"(not an int); falling back to 1 device",
+                UserWarning, stacklevel=2)
+            return 1
+    n = max(1, min(int(n), cap))
+    cpus = os.cpu_count() or 1
+    if n > cpus:
+        warnings.warn(
+            f"host_device_count({n}) exceeds the {cpus} physical CPU(s); "
+            f"XLA will time-slice the extra host devices",
+            UserWarning, stacklevel=2)
+    return n
+
+
+def force_host_device_count(n: Optional[int] = None) -> int:
+    """Make host CPUs look like an ``n``-device JAX mesh (bayespec idiom:
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+
+    Resolves ``n`` through :func:`host_device_count` and prepends the XLA
+    flag to ``XLA_FLAGS`` (replacing any previous forced count).  Only
+    effective *before* jax initializes its backends — if jax is already
+    imported the flag cannot take effect any more, so this warns and
+    leaves the environment unchanged.  Returns the resolved count.
+    """
+    import sys
+
+    n = host_device_count(n)
+    if "jax" in sys.modules:
+        import jax
+        live = len(jax.devices())
+        if live != n:
+            warnings.warn(
+                f"force_host_device_count({n}) called after jax "
+                f"initialized with {live} device(s); the XLA flag cannot "
+                f"take effect any more", UserWarning, stacklevel=2)
+        return live
+    flag = f"--xla_force_host_platform_device_count={n}"
+    prev = [p for p in os.environ.get("XLA_FLAGS", "").split()
+            if not p.startswith("--xla_force_host_platform_device_count")]
+    os.environ["XLA_FLAGS"] = " ".join(prev + [flag]).strip()
+    return n
+
+
+def devices() -> list:
+    """The live JAX device list (imports jax on first use).
+
+    Call :func:`force_host_device_count` first to widen a CPU-only mesh;
+    once jax is imported the device count is frozen for the process.
+    """
+    import jax
+
+    return jax.devices()
 
 
 def disk_cache_enabled(default: bool = False) -> bool:

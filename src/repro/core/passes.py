@@ -46,7 +46,7 @@ from .place import PlaceParams, place
 from .post_pnr import PostPnRParams, PostPnRResult, post_pnr_pipeline
 from .power import EnergyParams, PowerReport
 from .power_cap import PowerCapResult, power_capped_pipeline
-from .route import route
+from .route import RouteParams, route
 from .schedule import Schedule
 from .sim import equivalent
 from .sta import STAReport
@@ -263,6 +263,8 @@ CONFIG_FIELD_STAGE: Dict[str, str] = {
     "seed": "placed",
     "place_moves": "placed",
     "region": "placed",              # first constrains placement sites
+    "pnr_backend": "placed",         # kernels differ from placement on
+    "pnr_replicas": "placed",
 
     "post_pnr_budget": "pipelined",
     "post_pnr_iters": "pipelined",
@@ -539,7 +541,9 @@ def _run_place(ctx: CompileContext):
                          or isinstance(fabric, SubFabric))
           else generate_timing_model(fabric))
     pp = PlaceParams(alpha=cfg.placement_alpha, gamma=cfg.placement_gamma,
-                     seed=cfg.seed, moves_per_node=cfg.place_moves)
+                     seed=cfg.seed, moves_per_node=cfg.place_moves,
+                     backend=cfg.pnr_backend,
+                     replicas=cfg.pnr_replicas or None)
     place_stats: dict = {}
     placement = place(nl, fabric, pp, stats=place_stats, region=region)
     ctx.netlist, ctx.place_fabric, ctx.place_timing = nl, fabric, tm
@@ -557,6 +561,7 @@ def _run_route(ctx: CompileContext):
     ctx.require(netlist=ctx.netlist, placement=ctx.placement,
                 place_fabric=ctx.place_fabric)
     design = route(ctx.netlist, ctx.placement, ctx.place_fabric,
+                   RouteParams(backend=ctx.config.pnr_backend),
                    region=ctx.config.region)
     design.unroll_copies = ctx.copies
     design.source_dfg = ctx.source_dfg

@@ -40,7 +40,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .config import place_debug
+from .config import PNR_BACKENDS, place_debug
 from .dfg import FIFO, INPUT, MEM, OUTPUT, PE, RF
 from .interconnect import Fabric, Region, Tile
 from .netlist import Netlist
@@ -62,6 +62,27 @@ class PlaceParams:
     vectorized: bool = True   # batched net-cost evaluation (same results)
     debug: Optional[bool] = None   # None -> CASCADE_PLACE_DEBUG env flag
     resync_tol: float = 1e-6  # drift tolerance for the debug assertions
+    # kernel backend: None resolves to "numpy"/"scalar" from ``vectorized``
+    # (back-compat); "jax" runs the jitted parallel-tempering annealer in
+    # :mod:`repro.core.place_jax` (``replicas`` chains on a geometric
+    # temperature ladder, spread ``replica_spread`` apart, exchanging
+    # states after every temperature step; ``restarts`` is subsumed by the
+    # replica ensemble there).  ``replicas``/``replica_spread`` default to
+    # a netlist-size-adaptive policy (small netlists get more, colder
+    # replicas plus a doubled ensemble budget — they are cheap and their
+    # single-chain cost has high variance to beat).
+    backend: Optional[str] = None
+    replicas: Optional[int] = None
+    replica_spread: Optional[float] = None
+    proposal_block: int = 32  # jax: move proposals evaluated per step
+
+    def resolved_backend(self) -> str:
+        b = self.backend or ("numpy" if self.vectorized else "scalar")
+        if b not in PNR_BACKENDS:
+            raise ValueError(
+                f"unknown place backend {b!r}; expected one of "
+                f"{PNR_BACKENDS}")
+        return b
 
 
 class _Nets:
@@ -149,6 +170,8 @@ def place(nl: Netlist, fabric: Fabric,
     A final containment assertion backstops the invariant.
     """
     p = params or PlaceParams()
+    backend = p.resolved_backend()
+    vectorized = backend != "scalar"
     debug = place_debug() if p.debug is None else p.debug
     t_start = time.perf_counter()
     rng = np.random.default_rng(p.seed)
@@ -179,7 +202,20 @@ def place(nl: Netlist, fabric: Fabric,
     resyncs = 0
 
     best_pos, best_cost = None, math.inf
-    for restart in range(max(1, p.restarts)):
+    extra: dict = {}
+    if backend == "jax":
+        from .place_jax import anneal_jax
+
+        best_pos, best_cost, jstats = anneal_jax(nets, cls, sites, p)
+        moves_evaluated = jstats["moves_evaluated"]
+        moves_accepted = jstats["moves_accepted"]
+        resyncs = jstats["resyncs"]
+        extra = {k: jstats[k] for k in
+                 ("replicas", "devices", "best_replica", "replica_costs")}
+        restarts = 0          # the replica ensemble subsumes restarts
+    else:
+        restarts = max(1, p.restarts)
+    for restart in range(restarts):
         pos = np.zeros((n, 2), dtype=np.int64)
         site_of: Dict[int, int] = {}
         occupant: Dict[Tuple[str, int], int] = {}
@@ -214,7 +250,7 @@ def place(nl: Netlist, fabric: Fabric,
             pos[i] = sites[c][si_new]
             if j is not None:
                 pos[j] = old_pos_i
-            if p.vectorized:
+            if vectorized:
                 new = _net_cost_batch(pos, term_mat, term_count,
                                       p.gamma, p.alpha)
             else:
@@ -296,7 +332,9 @@ def place(nl: Netlist, fabric: Fabric,
 
     if stats is not None:
         stats.update({
-            "vectorized": p.vectorized,
+            "backend": backend,
+            "vectorized": vectorized,
+            **extra,
             "nodes": n, "nets": len(nets.nets),
             "moves_evaluated": moves_evaluated,
             "moves_accepted": moves_accepted,

@@ -7,6 +7,16 @@ overuse is negotiated across iterations — every boundary edge has
 ``fabric.track_capacity(width)`` tracks per direction; overused edges get a
 growing history cost and the nets crossing them are ripped up and rerouted.
 
+``RouteParams.backend`` selects the inner-loop kernel: ``"scalar"`` and
+``"numpy"`` are both this module's Python A* (the router never had a
+separate vectorized path — the names exist so ``PassConfig.pnr_backend``
+means the same thing at both PnR stages), while ``"jax"`` swaps in the
+batched wavefront relaxation of :mod:`repro.core.route_jax`, which routes
+every dirty driver of a width class in one jitted call.  Both backends
+produce the same ``driver -> branch -> tile path`` map and share the
+finalization below (region containment check, hop construction, register
+distribution), so post-route legality is checked identically.
+
 After routing, each branch distributes its ``n_regs`` pipelining registers
 evenly along its hops (post-PnR pipelining later adds registers at chosen
 sites).
@@ -19,6 +29,7 @@ import math
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Set, Tuple
 
+from .config import PNR_BACKENDS
 from .interconnect import Fabric, Hop, Region, Tile, manhattan
 from .netlist import Branch, Netlist, RoutedBranch, RoutedDesign
 
@@ -28,6 +39,15 @@ class RouteParams:
     max_iters: int = 12
     present_fac: float = 2.0
     history_fac: float = 0.7
+    backend: Optional[str] = None    # None -> "numpy" (the Python A* path)
+
+    def resolved_backend(self) -> str:
+        b = self.backend or "numpy"
+        if b not in PNR_BACKENDS:
+            raise ValueError(
+                f"unknown route backend {b!r}; expected one of "
+                f"{PNR_BACKENDS}")
+        return b
 
 
 def _astar(fabric: Fabric, srcs: Dict[Tile, float], dst: Tile,
@@ -61,10 +81,11 @@ def route(nl: Netlist, placement: Dict[str, Tile], fabric: Fabric,
           region: Optional[Region] = None) -> RoutedDesign:
     """Route every branch; with ``region`` (multi-app fabric sharing) the
     routes are *fenced*: any edge that would cross the region boundary into
-    a foreign sub-fabric costs ``inf``, so A* never relaxes through it and
-    no hop of a resident's net can consume a neighbour's routing tracks.
-    A post-route containment check backstops the fence."""
+    a foreign sub-fabric costs ``inf``, so the search never relaxes through
+    it and no hop of a resident's net can consume a neighbour's routing
+    tracks.  A post-route containment check backstops the fence."""
     p = params or RouteParams()
+    backend = p.resolved_backend()
     width_class = lambda w: 16 if w >= 16 else 1
 
     # group branches by driver (routing trees)
@@ -72,20 +93,35 @@ def route(nl: Netlist, placement: Dict[str, Tile], fabric: Fabric,
     for b in nl.branches:
         by_driver.setdefault(b.driver, []).append(b)
 
+    if backend == "jax":
+        from .route_jax import route_trees_jax
+        tree_paths = route_trees_jax(nl, placement, fabric, by_driver, p,
+                                     region)
+        return _finalize(nl, placement, fabric, by_driver, tree_paths,
+                         region)
+
     history: Dict[Tuple[Tile, Tile, int], float] = {}
     usage: Dict[Tuple[Tile, Tile, int], int] = {}
     tree_paths: Dict[str, Dict[Tuple[str, str, int], List[Tile]]] = {}
 
+    # static per-width-class tables, hoisted out of the per-driver loop:
+    # the closures used to be rebuilt per routed driver and called
+    # ``fabric.track_capacity`` once per relaxed edge
+    cap = {wc: fabric.track_capacity(wc) for wc in (1, 16)}
+
     def edge_cost_fn(wc: int):
+        wc_cap = cap[wc]
+
         def cost(a: Tile, b: Tile) -> float:
             if region is not None and not (region.contains(a)
                                            and region.contains(b)):
                 return math.inf          # region fence: foreign boundary
             key = (a, b, wc)
-            cap = fabric.track_capacity(wc)
-            over = max(0, usage.get(key, 0) + 1 - cap)
+            over = max(0, usage.get(key, 0) + 1 - wc_cap)
             return 1.0 + p.present_fac * over + history.get(key, 0.0)
         return cost
+
+    cost_fns = {wc: edge_cost_fn(wc) for wc in (1, 16)}
 
     def add_usage(drv: str, path_edges: Set[Tuple[Tile, Tile]], wc: int, sign: int):
         for a, b in path_edges:
@@ -102,7 +138,7 @@ def route(nl: Netlist, placement: Dict[str, Tile], fabric: Fabric,
         # tree: tile -> tile path from driver to that tile
         tree: Dict[Tile, List[Tile]] = {src_tile: [src_tile]}
         out: Dict[Tuple[str, str, int], List[Tile]] = {}
-        cost = edge_cost_fn(wc)
+        cost = cost_fns[wc]
         for b in branches:
             dst = placement[b.sink]
             if dst in tree:
@@ -139,8 +175,7 @@ def route(nl: Netlist, placement: Dict[str, Tile], fabric: Fabric,
                      for i in range(len(pth) - 1)}
             add_usage(drv, edges, wc, +1)
         # find overuse
-        over = {k for k, u in usage.items()
-                if u > fabric.track_capacity(k[2])}
+        over = {k for k, u in usage.items() if u > cap[k[2]]}
         if not over:
             break
         for k in over:
@@ -154,12 +189,21 @@ def route(nl: Netlist, placement: Dict[str, Tile], fabric: Fabric,
                     dirty.add(drv)
                     break
     else:
-        over = {k for k, u in usage.items() if u > fabric.track_capacity(k[2])}
+        over = {k for k, u in usage.items() if u > cap[k[2]]}
         if over:
             raise RuntimeError(
                 f"{nl.name}: routing did not converge, {len(over)} overused "
                 f"boundaries after {p.max_iters} iterations")
 
+    return _finalize(nl, placement, fabric, by_driver, tree_paths, region)
+
+
+def _finalize(nl: Netlist, placement: Dict[str, Tile], fabric: Fabric,
+              by_driver: Dict[str, List[Branch]],
+              tree_paths: Dict[str, Dict[Tuple[str, str, int], List[Tile]]],
+              region: Optional[Region]) -> RoutedDesign:
+    """Shared post-route step for every backend: region containment check,
+    hop construction, register distribution."""
     routes: Dict[Tuple[str, str, int], RoutedBranch] = {}
     for drv, paths in tree_paths.items():
         for b in by_driver[drv]:
