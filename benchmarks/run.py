@@ -43,7 +43,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="cascade|lm|roofline|pipeline|ablations|frontier|"
-                         "multi|pnr")
+                         "multi|pnr|sim")
     ap.add_argument("--fast", action="store_true",
                     help="reduced SA move counts / sweep grids for a quick "
                          "smoke run (tables keep their shape, lose accuracy)")
@@ -129,6 +129,11 @@ def main() -> None:
         results["pnr_kernels"] = section("pnr", lambda: pnr_kernels.run_all(
             fast=args.fast))
 
+    if args.only in (None, "sim"):
+        from benchmarks import sim_throughput
+        results["sim"] = section("sim", lambda: sim_throughput.run_all(
+            fast=args.fast))
+
     # ----- headline band checks (paper abstract) -------------------------
     if "dense_table" in results:
         print("\n== Paper band check ==")
@@ -177,6 +182,10 @@ def main() -> None:
     # claim is attributable to the stage, not the cache
     if results.get("pnr_kernels"):
         record["pnr_kernels"] = results["pnr_kernels"]
+    # simulator backend head-to-head + traffic replay rows ride along so
+    # the >=10x jax claim and the throughput objective are tracked per run
+    if results.get("sim"):
+        record["sim"] = results["sim"]
     append_bench_record(args.bench_out, record)
 
 

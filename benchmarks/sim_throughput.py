@@ -1,0 +1,191 @@
+"""Simulator backend head-to-head + trace-driven throughput replay.
+
+Times ``simulate`` / ``simulate_sparse`` for the interpreter, numpy, and
+jax backends on the benchmark apps, asserting two contracts from the
+vectorized-simulator work:
+
+* **bit identity** — every backend produces byte-equal output streams on
+  every app (16-bit random input streams);
+* **speed** — the warm jax backend is >= 10x faster than the interpreter
+  on a 4096-cycle harris run (the jit is lru-cached on program shape, so
+  the cold call pays XLA compile once and the steady state is what the
+  oracle-check and traffic workloads see).
+
+On top, replays periodic and Poisson arrival traces against a two-app
+``compile_multi`` pack (``repro.core.traffic``) and reports per-app fill
+latency, steady-state/achieved throughput, and downtime fractions.
+
+    PYTHONPATH=src python -m benchmarks.sim_throughput [--fast]
+        [--bench-out BENCH_sim.json]
+
+``benchmarks.run`` drives this as the ``sim`` section and folds the rows
+into its ``BENCH_sim.json`` trajectory record.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks._util import append_bench_record, print_csv
+
+SEED = 0
+HARRIS_CYCLES = 4096            # the >= 10x assertion's workload
+DENSE_CYCLES_FULL = 1024        # the non-headline dense apps
+SPARSE_TOKENS = 64
+
+
+def _dense_inputs(g, cycles: int, seed: int = SEED) -> Dict[str, list]:
+    rng = np.random.default_rng(seed)
+    return {n: rng.integers(0, 0x10000, size=cycles).tolist()
+            for n, nd in g.nodes.items() if nd.kind == "input"}
+
+
+def _time(fn, repeat: int = 1) -> float:
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def dense_rows(fast: bool = False) -> List[Dict]:
+    from repro.core import DENSE_APPS, simulate
+
+    apps = ["gaussian", "harris"] if fast else list(DENSE_APPS)
+    if "harris" not in apps:
+        apps.append("harris")
+    rows = []
+    for name in apps:
+        g = DENSE_APPS[name].build(1)
+        cycles = HARRIS_CYCLES if name == "harris" else \
+            (HARRIS_CYCLES if fast else DENSE_CYCLES_FULL)
+        ins = _dense_inputs(g, cycles)
+        ref = {}
+        t_interp = _time(lambda: ref.update(simulate(g, ins, cycles)))
+        out_np = {}
+        t_np = _time(lambda: out_np.update(
+            simulate(g, ins, cycles, backend="numpy")))
+        t_jax_cold = _time(lambda: simulate(g, ins, cycles, backend="jax"))
+        out_jax = {}
+        t_jax = _time(lambda: out_jax.update(
+            simulate(g, ins, cycles, backend="jax")), repeat=3)
+        assert out_np == ref, f"{name}: numpy dense streams diverge"
+        assert out_jax == ref, f"{name}: jax dense streams diverge"
+        row = {
+            "app": name, "nodes": len(g.nodes), "cycles": cycles,
+            "interp_s": round(t_interp, 4),
+            "numpy_s": round(t_np, 4),
+            "jax_cold_s": round(t_jax_cold, 4),
+            "jax_s": round(t_jax, 4),
+            "interp_cps": round(cycles / t_interp),
+            "numpy_cps": round(cycles / t_np),
+            "jax_cps": round(cycles / t_jax),
+            "numpy_speedup": round(t_interp / t_np, 2),
+            "jax_speedup": round(t_interp / t_jax, 2),
+        }
+        if name == "harris" and cycles == HARRIS_CYCLES:
+            assert row["jax_speedup"] >= 10, (
+                f"harris {HARRIS_CYCLES}-cycle warm jax speedup "
+                f"{row['jax_speedup']}x below the 10x bar")
+        rows.append(row)
+    return rows
+
+
+def sparse_rows(fast: bool = False) -> List[Dict]:
+    from repro.core import SPARSE_APPS, simulate_sparse
+
+    apps = ["vecadd", "mttkrp"] if fast else list(SPARSE_APPS)
+    rng = np.random.default_rng(SEED)
+    rows = []
+    for name in apps:
+        g = SPARSE_APPS[name].build(1)
+        ins = {n: rng.integers(0, 0x10000, size=SPARSE_TOKENS).tolist()
+               for n, nd in g.nodes.items() if nd.kind == "input"}
+        # the synchronous fire-vector advances one hop per round — bound
+        # generously but identically for all backends
+        max_cycles = SPARSE_TOKENS * 40
+        ref = {}
+        t_interp = _time(lambda: ref.update(
+            simulate_sparse(g, ins, max_cycles)))
+        out_np = {}
+        t_np = _time(lambda: out_np.update(
+            simulate_sparse(g, ins, max_cycles, backend="numpy")))
+        _time(lambda: simulate_sparse(g, ins, max_cycles, backend="jax"))
+        out_jax = {}
+        t_jax = _time(lambda: out_jax.update(
+            simulate_sparse(g, ins, max_cycles, backend="jax")), repeat=3)
+        assert out_np == ref, f"{name}: numpy sparse streams diverge"
+        assert out_jax == ref, f"{name}: jax sparse streams diverge"
+        rows.append({
+            "app": name, "nodes": len(g.nodes), "tokens": SPARSE_TOKENS,
+            "interp_s": round(t_interp, 4),
+            "numpy_s": round(t_np, 4),
+            "jax_s": round(t_jax, 4),
+            "numpy_speedup": round(t_interp / t_np, 2),
+            "jax_speedup": round(t_interp / t_jax, 2),
+        })
+    return rows
+
+
+def traffic_rows(fast: bool = False) -> Dict:
+    from repro.core import (ALL_APPS, CascadeCompiler, CompileCache,
+                            MultiAppSpec, PassConfig, periodic_trace,
+                            poisson_trace, replay)
+
+    c = CascadeCompiler(cache=CompileCache(), stage_cache=CompileCache())
+    cfg = PassConfig.full(place_moves=20 if fast else 60)
+    pack = c.compile_multi(MultiAppSpec.of(
+        ALL_APPS["unsharp"], ALL_APPS["vecadd"], config=cfg))
+    n_req = 50 if fast else 500
+    reports = {}
+    for trace in (periodic_trace(["unsharp", "vecadd"], period=2000,
+                                 n_requests=n_req, phase=37),
+                  poisson_trace(["unsharp", "vecadd"], mean_gap=2000,
+                                n_requests=n_req, seed=SEED)):
+        rep = replay(pack, trace, iterations=1024)
+        reports[trace.name] = {
+            "summary": rep.summary(),
+            "per_app": rep.rows(),
+        }
+    return reports
+
+
+def run_all(fast: bool = False) -> Dict:
+    dense = dense_rows(fast=fast)
+    print_csv(dense, "simulate() interpreter vs numpy vs jax (cycles/sec)")
+    sparse = sparse_rows(fast=fast)
+    print_csv(sparse, "simulate_sparse() interpreter vs numpy vs jax")
+    traffic = traffic_rows(fast=fast)
+    for tname, rep in traffic.items():
+        print_csv(rep["per_app"], f"trace replay: {tname}")
+        print(f"[sim_throughput] {tname}: {rep['summary']}")
+    harris = next(r for r in dense
+                  if r["app"] == "harris" and r["cycles"] == HARRIS_CYCLES)
+    print(f"[sim_throughput] harris {HARRIS_CYCLES} cycles: interpreter "
+          f"{harris['interp_cps']} c/s, numpy {harris['numpy_cps']} c/s, "
+          f"jax {harris['jax_cps']} c/s "
+          f"({harris['jax_speedup']}x, bar >= 10x)")
+    return {"dense": dense, "sparse": sparse, "traffic": traffic}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--bench-out", default="BENCH_sim.json")
+    args = ap.parse_args()
+    t0 = time.time()
+    results = run_all(fast=args.fast)
+    append_bench_record(args.bench_out, {
+        "fast": args.fast,
+        "total_seconds": round(time.time() - t0, 2),
+        **results,
+    })
+
+
+if __name__ == "__main__":
+    main()

@@ -18,10 +18,11 @@ from .cache import (DEFAULT_CACHE, DEFAULT_STAGE_CACHE, CompileCache,
 from .compiler import (BATCH_BACKENDS, CACHED_STAGES, BatchCompileError,
                        CascadeCompiler, CompileResult, MultiAppSpec,
                        PassConfig, compile_batch, compile_multi)
-from .config import (PNR_BACKENDS, cache_dir, default_power_cap_mw,
-                     devices, disk_cache_enabled, env_flag, env_float,
-                     force_host_device_count, host_device_count, place_debug,
-                     pnr_backend, worker_count)
+from .config import (PNR_BACKENDS, SIM_BACKENDS, cache_dir,
+                     default_power_cap_mw, devices, disk_cache_enabled,
+                     env_flag, env_float, force_host_device_count,
+                     host_device_count, place_debug, pnr_backend,
+                     sim_backend, worker_count)
 from .dfg import DFG
 from .explore import (ExploreSpec, FrontierPoint, ParetoFrontier,
                       evaluate_candidate, explore_frontier, pareto_prune)
@@ -47,7 +48,14 @@ from .power_cap import (DesignCheckpoint, ParetoPoint, PowerCapResult,
                         evaluate_point, power_capped_pipeline)
 from .route import RouteParams, route
 from .schedule import Schedule, schedule_round2
-from .sim import equivalent, simulate, simulate_sparse, sparse_equivalent
+from .sim import (clear_ref_memo, equivalent, output_latency, simulate,
+                  simulate_sparse, sparse_equivalent)
+from .sim_vec import (DenseProgram, SimLoweringError, SparseProgram,
+                      lower_dense, lower_sparse, simulate_dense_vec,
+                      simulate_sparse_vec)
+from .traffic import (AppTrafficStats, TrafficReport, TrafficTrace,
+                      flush_downtime_cycles, periodic_trace, poisson_trace,
+                      reconfig_cycles, replay)
 from .sta import STAReport, analyze, sdf_simulate_fmax
 from .timing_model import TECH_NS, TimingModel, generate_timing_model
 from .unroll import max_copies, subfabric_for
@@ -67,8 +75,8 @@ __all__ = [
     "code_fingerprint",
     "cache_dir", "default_power_cap_mw", "disk_cache_enabled", "env_flag",
     "env_float", "place_debug", "worker_count",
-    "PNR_BACKENDS", "pnr_backend", "host_device_count",
-    "force_host_device_count", "devices",
+    "PNR_BACKENDS", "pnr_backend", "SIM_BACKENDS", "sim_backend",
+    "host_device_count", "force_host_device_count", "devices",
     "CompileContext", "Pass", "PassPipeline", "PASS_REGISTRY",
     "DEFAULT_SCHEDULE", "POWER_CAPPED_SCHEDULE", "EXPLORE_SCHEDULE",
     "NAMED_SCHEDULES", "resolve_schedule", "register_pass", "find_reg_chains",
@@ -90,5 +98,11 @@ __all__ = [
     "power_capped_pipeline",
     "add_soft_flush", "remove_flush",
     "simulate", "simulate_sparse", "equivalent", "sparse_equivalent",
+    "output_latency", "clear_ref_memo",
+    "SimLoweringError", "DenseProgram", "SparseProgram", "lower_dense",
+    "lower_sparse", "simulate_dense_vec", "simulate_sparse_vec",
+    "TrafficTrace", "TrafficReport", "AppTrafficStats", "replay",
+    "periodic_trace", "poisson_trace", "flush_downtime_cycles",
+    "reconfig_cycles",
     "max_copies", "subfabric_for",
 ]

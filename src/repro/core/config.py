@@ -22,6 +22,11 @@ knob lives here and is re-exported from :mod:`repro.core`:
                          CLIs) and written into the ``PassConfig`` they
                          build — never read inside the compiler itself, so
                          the compile-cache key always reflects the cap.
+    CASCADE_SIM_BACKEND  default simulator backend for benchmark/driver
+                         CLIs: "interpreter", "numpy", or "jax"
+                         (``repro.core.sim_vec``).  Driver-side only —
+                         drivers pass it as the explicit ``backend=``
+                         argument; library code never reads it.
     CASCADE_PNR_BACKEND  default place-and-route kernel backend for the
                          benchmark/driver CLIs: "scalar", "numpy", or
                          "jax".  Driver-side only, like the power cap —
@@ -122,6 +127,36 @@ def default_power_cap_mw(default: Optional[float] = None) -> Optional[float]:
 #: ``numpy`` are the bit-identical SA/A* pair from PR 2; ``jax`` is the
 #: jitted parallel-tempering placer + batched wavefront router.
 PNR_BACKENDS = ("scalar", "numpy", "jax")
+
+
+#: The simulator backends (``repro.core.sim`` ``backend=`` argument).
+#: ``interpreter`` is the deque-and-dict oracle; ``numpy`` and ``jax``
+#: are the vectorized lowerings in :mod:`repro.core.sim_vec`,
+#: bit-identical to it over the 16-bit value domain.
+SIM_BACKENDS = ("interpreter", "numpy", "jax")
+
+
+def sim_backend(default: str = "interpreter") -> str:
+    """Default simulator backend (``CASCADE_SIM_BACKEND``).
+
+    Driver-side only, exactly like :func:`pnr_backend`: benchmark CLIs
+    and the traffic-replay harness pass the value into the ``backend=``
+    argument of :func:`repro.core.sim.simulate` /
+    :func:`~repro.core.sim.simulate_sparse` — library code never reads
+    the env var implicitly, so oracle checks stay reproducible.  An
+    unknown value warns and falls back to ``default``.
+    """
+    v = os.environ.get("CASCADE_SIM_BACKEND")
+    if v is None or not v.strip():
+        return default
+    v = v.strip().lower()
+    if v not in SIM_BACKENDS:
+        warnings.warn(
+            f"ignoring unknown CASCADE_SIM_BACKEND={v!r} "
+            f"(expected one of {SIM_BACKENDS}); falling back to "
+            f"{default!r}", UserWarning, stacklevel=2)
+        return default
+    return v
 
 
 def pnr_backend(default: str = "numpy") -> str:
