@@ -43,7 +43,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="cascade|lm|roofline|pipeline|ablations|frontier|"
-                         "multi|pnr|sim")
+                         "multi|pnr|sim|serve")
     ap.add_argument("--fast", action="store_true",
                     help="reduced SA move counts / sweep grids for a quick "
                          "smoke run (tables keep their shape, lose accuracy)")
@@ -134,6 +134,11 @@ def main() -> None:
         results["sim"] = section("sim", lambda: sim_throughput.run_all(
             fast=args.fast))
 
+    if args.only in (None, "serve"):
+        from benchmarks import serve_online
+        results["serve"] = section("serve", lambda: serve_online.run_all(
+            fast=args.fast))
+
     # ----- headline band checks (paper abstract) -------------------------
     if "dense_table" in results:
         print("\n== Paper band check ==")
@@ -186,6 +191,14 @@ def main() -> None:
     # the >=10x jax claim and the throughput objective are tracked per run
     if results.get("sim"):
         record["sim"] = results["sim"]
+    # online-vs-static serving headline rides along so the scheduler's
+    # win margin on fragmentation-heavy traces is tracked per run
+    if results.get("serve"):
+        record["serve"] = {
+            name: {"objective_gain": r["objective_gain"],
+                   "rejection_delta": r["rejection_delta"],
+                   "online_wins": r["online_wins"]}
+            for name, r in results["serve"].items()}
     append_bench_record(args.bench_out, record)
 
 

@@ -1,0 +1,213 @@
+"""Online multi-tenant serving benchmark: FabricScheduler vs static packing.
+
+Replays fragmentation-heavy traffic traces — overlapping app sessions
+that arrive and depart at different times, carving holes into the fabric
+— through one shared :class:`~repro.core.service.CompileService`, twice:
+
+* **online**: the :class:`~repro.core.sched.FabricScheduler` (2D
+  rectangle admission, compacting re-pack on fragmentation, objective-
+  scored eviction, waitlist readmission), and
+* **static**: ``compile_multi``-style full-height column strips in
+  arrival order, no re-pack, no eviction (:func:`~repro.core.sched.
+  evaluate_static`).
+
+Both legs use identical epoch accounting, so the summed
+``TrafficReport.objective()`` totals and rejection counts are directly
+comparable; the acceptance check is that online beats static (higher
+objective or fewer rejections) on every fragmentation-heavy trace.
+
+    PYTHONPATH=src python -m benchmarks.serve_online [--fast]
+        [--trace NAME] [--seed N] [--bench-out BENCH_serve.json]
+
+Each run appends one record per trace to ``BENCH_serve.json`` (the
+online-serving trajectory file, mirroring ``BENCH_multi.json``).  The
+service knobs come from the driver-side env seams
+(``CASCADE_SERVICE_BATCH_WINDOW_MS`` / ``CASCADE_SERVICE_MAX_BATCH`` /
+``CASCADE_SCHED_LATENCY_WEIGHT``) — the library itself never reads them.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import random
+import time
+from typing import Dict, Optional, Tuple
+
+from benchmarks._util import append_bench_record, print_csv
+from repro.core import (CompileService, FabricScheduler, PassConfig,
+                        evaluate_static, sched_latency_weight,
+                        service_batch_window_s, service_max_batch,
+                        session_trace)
+from repro.core.apps import ALL_APPS
+from repro.core.traffic import TrafficTrace
+
+MOVES = 100
+FAST_MOVES = 40
+
+#: width-4 tenants + the width-8 harris pipeline that needs two adjacent
+#: MEM-column groups on the default 32x16 fabric — arrivals after a
+#: departure wave only fit once the scheduler compacts the survivors.
+NARROW_APPS = ("vecadd", "elemmul", "ttv", "mttkrp")
+WIDE_APP = "harris"
+PERIOD = 100_000
+
+
+def _alias(base: str, name: str):
+    return dataclasses.replace(ALL_APPS[base], name=name)
+
+
+def wide_waves_trace() -> Tuple[TrafficTrace, Dict]:
+    """Deterministic fragmentation: four width-4 tenants fill the column
+    groups, the 2nd and 4th depart (non-adjacent holes), then a width-8
+    tenant arrives — admissible online only via the compacting re-pack."""
+    sessions = [
+        ("a0", 0, 20_000_000),
+        ("a1", 100, 5_000_000),
+        ("a2", 200, 20_000_000),
+        ("a3", 300, 6_000_000),
+        ("w1", 8_000_000, 20_000_000),
+    ]
+    apps = {"a0": _alias("vecadd", "a0"), "a1": _alias("elemmul", "a1"),
+            "a2": _alias("ttv", "a2"), "a3": _alias("mttkrp", "a3"),
+            "w1": _alias(WIDE_APP, "w1")}
+    return session_trace(sessions, period=PERIOD, name="wide_waves"), apps
+
+
+def churn_trace(n_sessions: int, seed: int) -> Tuple[TrafficTrace, Dict]:
+    """Randomized session churn around fabric capacity: overlapping
+    narrow and wide tenants arriving/departing continuously."""
+    rng = random.Random(seed)
+    bases = list(NARROW_APPS) + [WIDE_APP]
+    apps, sessions, t = {}, [], 0
+    for i in range(n_sessions):
+        base = rng.choice(bases)
+        name = f"{base}_s{i}"
+        apps[name] = _alias(base, name)
+        t += rng.randint(100_000, 400_000)
+        sessions.append((name, t, t + rng.randint(300_000, 1_500_000)))
+    return session_trace(sessions, period=PERIOD,
+                         name=f"churn{seed}"), apps
+
+
+def run_trace(trace: TrafficTrace, apps: Dict, moves: int = MOVES,
+              latency_weight: Optional[float] = None,
+              bench_out: Optional[str] = "BENCH_serve.json") -> Dict:
+    weight = sched_latency_weight() if latency_weight is None \
+        else latency_weight
+    cfg = PassConfig.full(place_moves=moves)
+    configs = {name: cfg for name in trace.arrivals}
+    svc = CompileService(batch_window_s=service_batch_window_s(),
+                         max_batch=service_max_batch()).start()
+    try:
+        t0 = time.perf_counter()
+        online = FabricScheduler(service=svc, latency_weight=weight).run(
+            trace, apps, configs=configs)
+        t_online = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        static = evaluate_static(trace, apps, service=svc,
+                                 configs=configs, latency_weight=weight)
+        t_static = time.perf_counter() - t0
+        stats = svc.stats()
+    finally:
+        svc.stop()
+
+    rows = []
+    for out, wall in ((online, t_online), (static, t_static)):
+        s = out.summary()
+        rows.append({
+            "policy": s["policy"],
+            "objective": round(s["objective"], 1),
+            "admitted": s["admitted"],
+            "readmitted": s["readmitted"],
+            "rejected": s["rejected"],
+            "evicted": s["evicted"],
+            "repacks": s["repacks"],
+            "wall_s": round(wall, 2),
+        })
+    print_csv(rows, f"online vs static ({trace.name})")
+    gain = online.objective - static.objective
+    wins = (online.objective > static.objective
+            or online.rejected < static.rejected)
+    print(f"[serve] {trace.name}: objective {online.objective:,.0f} online "
+          f"vs {static.objective:,.0f} static "
+          f"({'+' if gain >= 0 else ''}{gain:,.0f}) | rejections "
+          f"{online.rejected} vs {static.rejected} | "
+          f"{'OK online wins' if wins else 'REGRESSION static wins'}")
+    print(f"[serve] service: {stats['completed']} compiles, "
+          f"{stats['dedup_inflight']} in-flight dedups, "
+          f"{stats['batches']} batches, cache hit rate "
+          f"{stats.get('cache', {}).get('hit_rate', 0.0)}, "
+          f"pool {stats['pool']['entries']} pinned / "
+          f"{stats['pool']['hits']} hits")
+
+    record = {
+        "trace": trace.name,
+        "apps": len(trace.arrivals),
+        "requests": trace.total_requests(),
+        "moves": moves,
+        "latency_weight": weight,
+        "online": online.summary(),
+        "static": static.summary(),
+        "objective_gain": round(gain, 3),
+        "rejection_delta": static.rejected - online.rejected,
+        "online_wins": wins,
+        "service": {
+            "completed": stats["completed"],
+            "failed": stats["failed"],
+            "dedup_inflight": stats["dedup_inflight"],
+            "batches": stats["batches"],
+            "largest_batch": stats["largest_batch"],
+            "cache_hit_rate": stats.get("cache", {}).get("hit_rate", 0.0),
+            "pool": stats["pool"],
+        },
+        "online_seconds": round(t_online, 3),
+        "static_seconds": round(t_static, 3),
+    }
+    if bench_out:
+        append_bench_record(bench_out, record)
+    return record
+
+
+def run_all(fast: bool = False, seed: int = 3,
+            bench_out: Optional[str] = "BENCH_serve.json") -> Dict:
+    moves = FAST_MOVES if fast else MOVES
+    traces = [wide_waves_trace(),
+              churn_trace(16 if fast else 48, seed)]
+    if not fast:
+        traces.append(churn_trace(48, seed + 1))
+    out = {}
+    for trace, apps in traces:
+        out[trace.name] = run_trace(trace, apps, moves=moves,
+                                    bench_out=bench_out)
+    wins = sum(1 for r in out.values() if r["online_wins"])
+    print(f"\n[serve] online wins {wins}/{len(out)} fragmentation-heavy "
+          f"traces")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller churn trace at reduced SA moves "
+                         "(CI perf-smoke)")
+    ap.add_argument("--trace", default=None,
+                    choices=("wide_waves", "churn"),
+                    help="run a single trace family (default: all)")
+    ap.add_argument("--seed", type=int, default=3,
+                    help="churn trace seed")
+    ap.add_argument("--bench-out", default="BENCH_serve.json")
+    args = ap.parse_args()
+    moves = FAST_MOVES if args.fast else MOVES
+    if args.trace == "wide_waves":
+        trace, apps = wide_waves_trace()
+        run_trace(trace, apps, moves=moves, bench_out=args.bench_out)
+    elif args.trace == "churn":
+        trace, apps = churn_trace(16 if args.fast else 48, args.seed)
+        run_trace(trace, apps, moves=moves, bench_out=args.bench_out)
+    else:
+        run_all(fast=args.fast, seed=args.seed, bench_out=args.bench_out)
+
+
+if __name__ == "__main__":
+    main()

@@ -12,17 +12,19 @@ from .branch_delay import (arrival_cycles_dfg, check_matched_dfg,
                            check_matched_netlist, match_dfg, match_netlist)
 from .broadcast import broadcast_pipelining
 from .cache import (DEFAULT_CACHE, DEFAULT_STAGE_CACHE, CompileCache,
-                    DiskCache, app_fingerprint, attach_disk_cache,
+                    DiskCache, StagePool, app_fingerprint, attach_disk_cache,
                     attach_stage_disk_cache, code_fingerprint, compile_key,
                     dfg_fingerprint, stage_key)
 from .compiler import (BATCH_BACKENDS, CACHED_STAGES, BatchCompileError,
                        CascadeCompiler, CompileResult, MultiAppSpec,
-                       PassConfig, compile_batch, compile_multi)
+                       PassConfig, compile_batch, compile_multi,
+                       resident_config)
 from .config import (PNR_BACKENDS, SIM_BACKENDS, cache_dir,
                      default_power_cap_mw, devices, disk_cache_enabled,
-                     env_flag, env_float, force_host_device_count,
+                     env_flag, env_float, env_int, force_host_device_count,
                      host_device_count, place_debug, pnr_backend,
-                     sim_backend, worker_count)
+                     sched_latency_weight, service_batch_window_s,
+                     service_max_batch, sim_backend, worker_count)
 from .dfg import DFG
 from .explore import (ExploreSpec, FrontierPoint, ParetoFrontier,
                       evaluate_candidate, explore_frontier, pareto_prune)
@@ -31,15 +33,17 @@ from .flush import (SharedFlushReport, add_soft_flush,
                     stateful_nodes)
 from .interconnect import Fabric, Hop, Region, SubFabric, Tile
 from .metrics import DesignMetrics, combine_metrics, evaluate_design
-from .multi import (MultiAppResult, PackingError, fabric_report,
-                    pack_regions, region_request, sink_tiles_by_app,
-                    validate_regions)
+from .multi import (MultiAppResult, PackingError, RectRequest, aligned_cols,
+                    assemble_pack, fabric_report, find_slot, fragmentation,
+                    free_area, pack_rects, pack_regions, region_request,
+                    repack_rects, sink_tiles_by_app, validate_regions)
 from .netlist import Netlist, RoutedDesign, extract_netlist
 from .passes import (CONFIG_FIELD_STAGE, DEFAULT_SCHEDULE, EXPLORE_SCHEDULE,
-                     MULTI_SCHEDULE, NAMED_SCHEDULES, PASS_REGISTRY,
-                     POWER_CAPPED_SCHEDULE, STAGE_OF_PASS, STAGE_ORDER,
-                     CompileContext, Pass, PassPipeline, StageArtifact,
-                     register_pass, resolve_schedule, stage_plan)
+                     MULTI_POWER_CAPPED_SCHEDULE, MULTI_SCHEDULE,
+                     NAMED_SCHEDULES, PASS_REGISTRY, POWER_CAPPED_SCHEDULE,
+                     STAGE_OF_PASS, STAGE_ORDER, CompileContext, Pass,
+                     PassPipeline, StageArtifact, register_pass,
+                     resolve_schedule, stage_plan)
 from .pipelining import collapse_reg_chains, compute_pipelining, find_reg_chains
 from .place import PlaceParams, place, placement_stats
 from .post_pnr import PostPnRParams, post_pnr_pipeline
@@ -53,9 +57,13 @@ from .sim import (clear_ref_memo, equivalent, output_latency, simulate,
 from .sim_vec import (DenseProgram, SimLoweringError, SparseProgram,
                       lower_dense, lower_sparse, simulate_dense_vec,
                       simulate_sparse_vec)
+from .sched import (POLICIES, FabricScheduler, Resident, ScheduleOutcome,
+                    compare_policies, evaluate_static)
+from .service import (CompileService, ServiceCancelled, ServiceClosed,
+                      ServiceTicket, ServiceTimeout)
 from .traffic import (AppTrafficStats, TrafficReport, TrafficTrace,
                       flush_downtime_cycles, periodic_trace, poisson_trace,
-                      reconfig_cycles, replay)
+                      reconfig_cycles, replay, session_trace)
 from .sta import STAReport, analyze, sdf_simulate_fmax
 from .timing_model import TECH_NS, TimingModel, generate_timing_model
 from .unroll import max_copies, subfabric_for
@@ -67,6 +75,12 @@ __all__ = [
     "MultiAppSpec", "MultiAppResult", "compile_multi", "PackingError",
     "Region", "SubFabric", "pack_regions", "region_request",
     "validate_regions", "sink_tiles_by_app", "fabric_report",
+    "RectRequest", "aligned_cols", "find_slot", "pack_rects", "repack_rects",
+    "free_area", "fragmentation", "assemble_pack", "resident_config",
+    "CompileService", "ServiceTicket", "ServiceClosed", "ServiceCancelled",
+    "ServiceTimeout", "StagePool",
+    "FabricScheduler", "Resident", "ScheduleOutcome", "POLICIES",
+    "evaluate_static", "compare_policies",
     "SharedFlushReport", "shared_flush", "flush_network_registers",
     "stateful_nodes", "combine_metrics", "MULTI_SCHEDULE",
     "CompileCache", "DiskCache", "DEFAULT_CACHE", "DEFAULT_STAGE_CACHE",
@@ -74,11 +88,13 @@ __all__ = [
     "compile_key", "stage_key", "app_fingerprint", "dfg_fingerprint",
     "code_fingerprint",
     "cache_dir", "default_power_cap_mw", "disk_cache_enabled", "env_flag",
-    "env_float", "place_debug", "worker_count",
+    "env_float", "env_int", "place_debug", "worker_count",
+    "service_batch_window_s", "service_max_batch", "sched_latency_weight",
     "PNR_BACKENDS", "pnr_backend", "SIM_BACKENDS", "sim_backend",
     "host_device_count", "force_host_device_count", "devices",
     "CompileContext", "Pass", "PassPipeline", "PASS_REGISTRY",
     "DEFAULT_SCHEDULE", "POWER_CAPPED_SCHEDULE", "EXPLORE_SCHEDULE",
+    "MULTI_POWER_CAPPED_SCHEDULE",
     "NAMED_SCHEDULES", "resolve_schedule", "register_pass", "find_reg_chains",
     "STAGE_ORDER", "STAGE_OF_PASS", "CONFIG_FIELD_STAGE", "CACHED_STAGES",
     "StageArtifact", "stage_plan",
@@ -102,7 +118,7 @@ __all__ = [
     "SimLoweringError", "DenseProgram", "SparseProgram", "lower_dense",
     "lower_sparse", "simulate_dense_vec", "simulate_sparse_vec",
     "TrafficTrace", "TrafficReport", "AppTrafficStats", "replay",
-    "periodic_trace", "poisson_trace", "flush_downtime_cycles",
-    "reconfig_cycles",
+    "periodic_trace", "poisson_trace", "session_trace",
+    "flush_downtime_cycles", "reconfig_cycles",
     "max_copies", "subfabric_for",
 ]

@@ -405,6 +405,65 @@ class CompileCache:
         return out
 
 
+class StagePool:
+    """Pinned pool of warm stage artifacts, keyed by stage content hash.
+
+    The compile service's tenant-warming tier: unlike the LRU
+    :class:`CompileCache` stage tier — where a burst of unrelated compiles
+    can evict exactly the ``mapped`` artifacts the scheduler's resident
+    compiles resume from — the pool holds one artifact per *warmed tenant*
+    and only evicts when the tenant set itself outgrows ``maxsize``
+    (oldest warm first).  ``get`` hands out private forks, so callers can
+    mutate what they receive without corrupting the pooled copy.
+    """
+
+    def __init__(self, maxsize: int = 64):
+        self.maxsize = maxsize
+        self._data: "OrderedDict[str, Any]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def __contains__(self, key: str) -> bool:
+        with self._lock:
+            return key in self._data
+
+    def get(self, key: str) -> Optional[Any]:
+        with self._lock:
+            art = self._data.get(key)
+            if art is None:
+                self.misses += 1
+                return None
+            self._data.move_to_end(key)
+            self.hits += 1
+        return art.fork()
+
+    def put(self, key: str, artifact: Any) -> None:
+        with self._lock:
+            self._data[key] = artifact
+            self._data.move_to_end(key)
+            while len(self._data) > self.maxsize:
+                self._data.popitem(last=False)
+                self.evictions += 1
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data.clear()
+            self.hits = self.misses = self.evictions = 0
+
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            total = self.hits + self.misses
+            return {"entries": len(self._data), "hits": self.hits,
+                    "misses": self.misses, "evictions": self.evictions,
+                    "hit_rate": round(self.hits / total, 3) if total
+                    else 0.0}
+
+
 #: Process-wide default cache.  Compilers created without an explicit cache
 #: share it, so repeated benchmark invocations within one process reuse each
 #: other's compiles (keys are full content hashes, so sharing is safe across

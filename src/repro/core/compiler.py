@@ -34,11 +34,10 @@ from .cache import (DEFAULT_CACHE, DEFAULT_STAGE_CACHE, CompileCache,
 from .config import worker_count
 from .explore import (ExploreSpec, ParetoFrontier, evaluate_candidate,
                       map_points_serial)
-from .flush import shared_flush
 from .interconnect import Fabric, Region
-from .multi import (MultiAppResult, fabric_report, pack_regions,
-                    sink_tiles_by_app, validate_regions)
-from .netlist import RoutedDesign, extract_netlist
+from .multi import (MultiAppResult, assemble_pack, pack_regions,
+                    validate_regions)
+from .netlist import Netlist, RoutedDesign, extract_netlist
 from .passes import (STAGE_ORDER, CompileContext, PassPipeline, StageArtifact,
                      resolve_schedule, stage_plan)
 from .post_pnr import PostPnRResult
@@ -206,6 +205,27 @@ class MultiAppSpec:
                     f"per resident; schedule={cfg.schedule!r} would be "
                     f"silently discarded — leave it unset")
         return out
+
+def resident_config(cfg: "PassConfig", region: Region,
+                    power_cap_mw: Optional[float] = None) -> "PassConfig":
+    """The config a pack resident actually compiles with.
+
+    Residents always harden their own flush (the pack provides the one
+    shared source; a mapped-stage soft flush keyed on region would alias
+    mapped artifacts) and run the ``"multi"`` schedule pinned to their
+    :class:`~repro.core.interconnect.Region`.  With ``power_cap_mw`` the
+    resident runs ``"multi_power_capped"`` instead — same physical prefix
+    through the ``routed`` boundary, so re-capping an already-compiled
+    resident resumes from its routed stage artifact and only re-runs the
+    budgeted post-PnR pipelining.  Shared by ``compile_multi`` and the
+    online scheduler (:mod:`repro.core.sched`).
+    """
+    if power_cap_mw is not None:
+        return dc_replace(cfg, region=region, schedule="multi_power_capped",
+                          harden_flush=True, power_cap_mw=power_cap_mw)
+    return dc_replace(cfg, region=region, schedule="multi",
+                      harden_flush=True)
+
 
 #: ``compile_batch`` backends.  "auto" picks "process" when more than one
 #: job misses every cache tier (the only case where multi-core pays for the
@@ -512,6 +532,42 @@ class CascadeCompiler:
                          until_stage=stage)
         return StageArtifact.capture(ctx, stage)
 
+    def stage_key_for(self, app: AppSpec,
+                      config: Optional[PassConfig] = None,
+                      stage: str = "mapped",
+                      unroll: Optional[int] = None) -> Optional[str]:
+        """The stage-cache content hash for ``(app, config, stage)``.
+
+        ``None`` when the config's schedule has no stage structure (custom
+        passes / out-of-order stages disable stage caching).  The compile
+        service keys its warm mapped-artifact pool on this, so pool
+        entries and stage-cache entries can never drift apart.
+        """
+        cfg = config or PassConfig()
+        pipe = PassPipeline.from_config(cfg)
+        plan = stage_plan(pipe.names)
+        end = dict(plan or []).get(stage)
+        if end is None:
+            return None
+        return stage_key(app, cfg, self.fabric, self.timing, self.energy,
+                         stage=stage, prefix=pipe.names[:end], unroll=unroll)
+
+    def mapped_netlist(self, app: AppSpec,
+                       config: Optional[PassConfig] = None,
+                       unroll: Optional[int] = None,
+                       use_cache: bool = True) -> Netlist:
+        """The app's mapped-stage netlist (hardened config), for sizing.
+
+        What :func:`repro.core.multi.region_request` and the online
+        scheduler's admission path need: one front-end + mapping run
+        (stage-cache resumed when warm — the same ``mapped`` artifact the
+        resident compile itself resumes from), no place/route.
+        """
+        cfg = dc_replace(config or PassConfig(), harden_flush=True)
+        art = self.compile_to_stage(app, cfg, stage="mapped", unroll=unroll,
+                                    use_cache=use_cache)
+        return extract_netlist(art.state["graph"])
+
     # -- multi-app fabric sharing ------------------------------------------
     def compile_multi(self, spec: Union[MultiAppSpec, Iterable[CompileJob]],
                       verify: bool = False, use_cache: bool = True,
@@ -561,44 +617,29 @@ class CascadeCompiler:
             if spec.regions is not None:
                 regions = list(spec.regions)
             else:
-                requests = []
-                for app, cfg in jobs:
-                    # size against the graph the resident will actually
-                    # place (hardened: no per-app __flush__ node) — this
-                    # also warms exactly the mapped artifact the resident
-                    # compile resumes from
-                    sizing_cfg = dc_replace(cfg, harden_flush=True)
-                    art = self.compile_to_stage(app, sizing_cfg,
-                                                stage="mapped",
-                                                use_cache=use_cache)
-                    requests.append((app.name,
-                                     extract_netlist(art.state["graph"])))
+                # size against the graph the resident will actually place
+                # (hardened: no per-app __flush__ node) — this also warms
+                # exactly the mapped artifact the resident compile
+                # resumes from
+                requests = [(app.name,
+                             self.mapped_netlist(app, cfg,
+                                                 use_cache=use_cache))
+                            for app, cfg in jobs]
                 regions = pack_regions(self.fabric, requests)
             validate_regions(self.fabric, regions, names)
-            # residents always harden their *own* flush: the pack provides
-            # the one shared source, and a mapped-stage soft_flush keyed on
-            # region would alias mapped stage artifacts (region is a
-            # placed-stage field)
-            rjobs = [(app, dc_replace(cfg, region=r, schedule="multi",
-                                      harden_flush=True))
+            rjobs = [(app, resident_config(cfg, r))
                      for (app, cfg), r in zip(jobs, regions)]
             results = self.compile_batch(rjobs, verify=verify,
                                          use_cache=use_cache,
                                          backend=backend,
                                          max_workers=max_workers)
-        designs = {r.app.name: r.design for r in results}
         harden = all(cfg.harden_flush for _, cfg in jobs)
         # a passthrough soft compile already routed + timed its own flush:
         # tm=None keeps the model cap from double-charging it
-        flush = shared_flush(sink_tiles_by_app(designs), self.fabric,
-                             tm=None if passthrough else self.timing,
-                             harden=harden)
-        region_map = dict(zip(names, regions))
-        summary = fabric_report(results, region_map, self.fabric, flush,
-                                energy=self.energy)
-        return MultiAppResult(name=spec.name, fabric=self.fabric,
-                              regions=region_map, results=results,
-                              flush=flush, summary=summary)
+        return assemble_pack(spec.name, self.fabric, results,
+                             dict(zip(names, regions)),
+                             timing=None if passthrough else self.timing,
+                             energy=self.energy, harden=harden)
 
     # -- batch compile -----------------------------------------------------
     def compile_batch(self, jobs: Iterable[CompileJob],

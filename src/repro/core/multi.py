@@ -94,24 +94,176 @@ def pack_regions(fabric: Fabric,
 
 
 def validate_regions(fabric: Fabric, regions: Sequence[Region],
-                     names: Sequence[str]) -> None:
-    """In-bounds, MEM-stride-aligned, pairwise-disjoint region check."""
+                     names: Sequence[str],
+                     needs_io: Optional[Sequence[bool]] = None) -> None:
+    """In-bounds, MEM-stride-aligned, pairwise-disjoint region check.
+
+    ``needs_io`` (parallel to ``regions``, default: every app needs IO)
+    additionally enforces north-edge IO ownership: a region whose app
+    streams through the global buffer must touch the north row, because an
+    interior region owns no row ``-1`` IO tiles on this CGRA class.
+    """
     if len(regions) != len(names):
         raise PackingError(
             f"{len(regions)} regions for {len(names)} apps")
+    if needs_io is not None and len(needs_io) != len(regions):
+        raise PackingError(
+            f"{len(needs_io)} needs_io flags for {len(regions)} regions")
     stride = fabric.mem_col_stride
-    for name, r in zip(names, regions):
+    for i, (name, r) in enumerate(zip(names, regions)):
         fabric.subregion(r)              # raises when out of bounds
         if r.col0 % stride:
             raise PackingError(
                 f"region of {name!r} starts at column {r.col0}, which is "
                 f"not aligned to the MEM-column stride {stride}")
+        if needs_io is not None and needs_io[i] and r.row0 != 0:
+            raise PackingError(
+                f"region of {name!r} starts at row {r.row0}: an app with "
+                f"IO streams must own north-edge IO tiles, so its region "
+                f"must touch row 0")
     for i in range(len(regions)):
         for j in range(i + 1, len(regions)):
             if regions[i].overlaps(regions[j]):
                 raise PackingError(
                     f"regions of {names[i]!r} and {names[j]!r} overlap: "
                     f"{regions[i]} vs {regions[j]}")
+
+
+# ---------------------------------------------------------------------------
+# 2D rectangle packing (online multi-tenant scheduling)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RectRequest:
+    """One admission request for the 2D rectangle packer.
+
+    ``rows``/``cols`` come from :func:`region_request` (the minimal window
+    the app's mapped netlist needs); ``needs_io`` records whether the app
+    streams through the global buffer — on this CGRA class IO enters from
+    the north edge only, so an IO app's rectangle must be anchored at row
+    0 (:class:`~repro.core.interconnect.Region` gives row ``-1`` IO tiles
+    only to the region owning the column *and* touching the north row).
+    Every real Cascade app has IO; ``needs_io=False`` exists so the packer
+    stays a general 2D packer (and is property-tested as one).
+    """
+
+    name: str
+    rows: int
+    cols: int
+    needs_io: bool = True
+
+
+def aligned_cols(fabric: Fabric, cols: int) -> int:
+    """Round a width request up to a whole number of MEM-stride column
+    groups (every region must contain its own MEM column(s))."""
+    stride = fabric.mem_col_stride
+    return -(-max(1, cols) // stride) * stride
+
+
+def find_slot(fabric: Fabric, occupied: Sequence[Region], rows: int,
+              cols: int, needs_io: bool = True) -> Optional[Region]:
+    """First-fit free rectangle for a ``rows x cols`` request.
+
+    The incremental half of the online packer: given the regions current
+    residents already own, return a disjoint, in-bounds, stride-aligned
+    window for the newcomer — or ``None`` when no position fits (the
+    scheduler then re-packs or evicts).  Candidate anchors scan north-west
+    to south-east (top-anchored first, then leftmost), so placement is
+    deterministic; ``needs_io`` pins the anchor row to the north edge.
+    """
+    w = aligned_cols(fabric, cols)
+    rows = max(1, rows)
+    if rows > fabric.rows or w > fabric.cols:
+        return None
+    row0s = (0,) if needs_io else tuple(range(fabric.rows - rows + 1))
+    stride = fabric.mem_col_stride
+    for r0 in row0s:
+        for c0 in range(0, fabric.cols - w + 1, stride):
+            cand = Region(r0, c0, rows, w)
+            if all(not cand.overlaps(r) for r in occupied):
+                return cand
+    return None
+
+
+def pack_rects(fabric: Fabric, requests: Sequence[RectRequest],
+               occupied: Sequence[Region] = ()) -> Dict[str, Region]:
+    """Greedy first-fit 2D rectangle pack of ``requests``, in order.
+
+    Unlike :func:`pack_regions` — which deals *full-height column strips*
+    and therefore cannot express the fragmented free space an online
+    scheduler faces after departures — this packs true rectangles
+    (variable heights, stride-aligned columns, north-edge anchoring for
+    IO apps) around whatever ``occupied`` regions already exist.  Raises
+    :class:`PackingError` naming the first request that does not fit.
+    """
+    seen = set()
+    for req in requests:
+        if req.name in seen:
+            raise PackingError(f"duplicate pack request {req.name!r}")
+        seen.add(req.name)
+    placed: List[Region] = list(occupied)
+    out: Dict[str, Region] = {}
+    for req in requests:
+        slot = find_slot(fabric, placed, req.rows, req.cols,
+                         needs_io=req.needs_io)
+        if slot is None:
+            raise PackingError(
+                f"no free {req.rows}x{aligned_cols(fabric, req.cols)} "
+                f"rectangle for {req.name!r} (occupied: "
+                f"{len(placed)} regions, free area "
+                f"{free_area(fabric, placed)} tiles)")
+        out[req.name] = slot
+        placed.append(slot)
+    return out
+
+
+def repack_rects(fabric: Fabric,
+                 requests: Sequence[RectRequest]) -> Dict[str, Region]:
+    """Compacting re-pack: place all residents afresh on an empty fabric.
+
+    Requests are packed widest-first (ties broken by height, then name) so
+    the hard-to-place rectangles claim contiguous space before the small
+    ones shred it — the defragmentation move the online scheduler runs
+    when an arrival fails to fit but total free area says it should.
+    Deterministic: same residents in, same regions out.
+    """
+    order = sorted(requests,
+                   key=lambda r: (-aligned_cols(fabric, r.cols), -r.rows,
+                                  r.name))
+    return pack_rects(fabric, order)
+
+
+def free_area(fabric: Fabric, occupied: Sequence[Region]) -> int:
+    """Tiles not owned by any resident (regions assumed disjoint)."""
+    return fabric.rows * fabric.cols - sum(r.area() for r in occupied)
+
+
+def fragmentation(fabric: Fabric, occupied: Sequence[Region],
+                  needs_io: bool = True) -> float:
+    """How shredded the free space is, in [0, 1].
+
+    0 = the largest admissible rectangle covers all free tiles (no
+    fragmentation); 1 = free tiles exist but no stride-aligned rectangle
+    is admissible at all.  The scheduler uses this to decide when a
+    failed admission is worth a re-pack rather than a rejection.
+    """
+    free = free_area(fabric, occupied)
+    if free <= 0:
+        return 0.0
+    best = 0
+    stride = fabric.mem_col_stride
+    for w in range(stride, fabric.cols + 1, stride):
+        lo, hi = 1, fabric.rows
+        while lo <= hi:                 # tallest fit at this width
+            mid = (lo + hi) // 2
+            if find_slot(fabric, occupied, mid, w,
+                         needs_io=needs_io) is not None:
+                best = max(best, mid * w)
+                lo = mid + 1
+            else:
+                hi = mid - 1
+    return 1.0 - best / free if free else 0.0
 
 
 def sink_tiles_by_app(designs: Dict[str, RoutedDesign]
@@ -150,6 +302,28 @@ class MultiAppResult:
                 **r.summary(),
             })
         return rows
+
+
+def assemble_pack(name: str, fabric: Fabric, results: Sequence,
+                  regions: Dict[str, Region], timing=None, energy=None,
+                  harden: bool = True) -> MultiAppResult:
+    """Build a :class:`MultiAppResult` from already-compiled residents.
+
+    The shared tail of ``compile_multi`` and the online scheduler
+    (:mod:`repro.core.sched`), which re-assembles the pack after every
+    admit/evict/re-pack event: one shared flush over every resident's
+    stateful sinks, then the fabric-level rollup at the shared clock.
+    ``timing=None`` skips the flush model's frequency cap (the
+    single-app passthrough case, whose own compile already timed its
+    flush).
+    """
+    designs = {r.app.name: r.design for r in results}
+    flush = shared_flush(sink_tiles_by_app(designs), fabric, tm=timing,
+                         harden=harden)
+    summary = fabric_report(results, regions, fabric, flush, energy=energy)
+    return MultiAppResult(name=name, fabric=fabric, regions=dict(regions),
+                          results=list(results), flush=flush,
+                          summary=summary)
 
 
 def fabric_report(results: Sequence, regions: Dict[str, Region],

@@ -195,6 +195,18 @@ _AFTER_MATCH = DEFAULT_SCHEDULE.index("match_check") + 1
 MULTI_SCHEDULE = (DEFAULT_SCHEDULE[:_AFTER_MATCH] + ("region_fence_check",)
                   + DEFAULT_SCHEDULE[_AFTER_MATCH:])
 
+#: A pack resident under a power budget: the ``"multi"`` flow with the
+#: post-PnR register insertion replaced by ``power_capped_pipeline``.  The
+#: online scheduler (:mod:`repro.core.sched`) re-runs residents through
+#: this when the *pack-level* cap is exceeded, handing each resident its
+#: share of the budget — the physical prefix through the ``routed``
+#: boundary is pass-for-pass identical to ``"multi"``, so a re-capped
+#: resident resumes from the routed stage artifact its uncapped compile
+#: already cached and only repeats the budgeted pipelining.
+MULTI_POWER_CAPPED_SCHEDULE = tuple(
+    "power_capped_pipeline" if name == "post_pnr" else name
+    for name in MULTI_SCHEDULE)
+
 #: Declarative schedules by name — ``PassConfig.schedule`` may be one of
 #: these strings instead of an explicit pass-name tuple.
 NAMED_SCHEDULES: Dict[str, Sequence[str]] = {
@@ -202,6 +214,7 @@ NAMED_SCHEDULES: Dict[str, Sequence[str]] = {
     "power_capped": POWER_CAPPED_SCHEDULE,
     "explore": EXPLORE_SCHEDULE,
     "multi": MULTI_SCHEDULE,
+    "multi_power_capped": MULTI_POWER_CAPPED_SCHEDULE,
 }
 
 

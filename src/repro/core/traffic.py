@@ -32,7 +32,7 @@ better) for an admission/eviction scheduler to maximize.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -41,16 +41,68 @@ from .interconnect import Fabric, Region
 
 @dataclass(frozen=True)
 class TrafficTrace:
-    """Request arrival times, in fabric cycles, per resident app."""
+    """Request arrival times, in fabric cycles, per app.
+
+    ``departures`` (optional) turns a replay trace into an *online* trace:
+    each named app leaves the fabric at its departure cycle, freeing its
+    region for later arrivals — the event stream the multi-tenant
+    scheduler (:mod:`repro.core.sched`) consumes via :meth:`events`.
+    Apps without an entry never depart.
+    """
 
     arrivals: Dict[str, List[int]]
     name: str = "trace"
+    departures: Optional[Dict[str, int]] = None
 
     def total_requests(self) -> int:
         return sum(len(a) for a in self.arrivals.values())
 
     def horizon(self) -> int:
-        return max((a[-1] for a in self.arrivals.values() if a), default=0)
+        h = max((a[-1] for a in self.arrivals.values() if a), default=0)
+        if self.departures:
+            h = max(h, max(self.departures.values()))
+        return h
+
+    def arrival_of(self, app: str) -> Optional[int]:
+        """When ``app`` arrives on the fabric: its first request cycle."""
+        times = self.arrivals.get(app)
+        return times[0] if times else None
+
+    def events(self) -> List[Tuple[int, str, str]]:
+        """The scheduler's event stream: sorted ``(cycle, kind, app)``.
+
+        One ``"arrive"`` event per app at its first request and one
+        ``"depart"`` event per ``departures`` entry.  At equal cycles
+        departures sort first — a leaving resident frees its region
+        before the simultaneous arrival tries to claim one.
+        """
+        order = {"depart": 0, "arrive": 1}
+        evs: List[Tuple[int, str, str]] = []
+        for app in sorted(self.arrivals):
+            t = self.arrival_of(app)
+            if t is not None:
+                evs.append((t, "arrive", app))
+        for app, t in sorted((self.departures or {}).items()):
+            if self.arrival_of(app) is not None:
+                evs.append((int(t), "depart", app))
+        evs.sort(key=lambda e: (e[0], order[e[1]], e[2]))
+        return evs
+
+    def restricted(self, apps: Sequence[str], t0: Optional[int] = None,
+                   t1: Optional[int] = None) -> "TrafficTrace":
+        """The sub-trace of ``apps``' arrivals within ``[t0, t1)``.
+
+        What the scheduler replays per epoch: only the current residents,
+        only the window between two consecutive events.  Departures are
+        dropped (a windowed replay has no further use for them).
+        """
+        keep = set(apps)
+        lo = -1 if t0 is None else t0
+        hi = float("inf") if t1 is None else t1
+        arrivals = {a: [t for t in ts if lo <= t < hi]
+                    for a, ts in self.arrivals.items() if a in keep}
+        return TrafficTrace({a: ts for a, ts in arrivals.items() if ts},
+                            name=f"{self.name}[{t0}:{t1}]")
 
 
 def periodic_trace(apps: Sequence[str], period: int, n_requests: int,
@@ -78,6 +130,36 @@ def poisson_trace(apps: Sequence[str], mean_gap: float, n_requests: int,
         arrivals[name] = np.maximum(1, np.rint(gaps)).cumsum().astype(
             np.int64).tolist()
     return TrafficTrace(arrivals, name=f"poisson_{mean_gap:g}")
+
+
+def session_trace(sessions: Sequence[Tuple[str, int, Optional[int]]],
+                  period: int, name: str = "sessions") -> TrafficTrace:
+    """An online trace from explicit app sessions.
+
+    Each session is ``(app, arrive_cycle, depart_cycle)`` (``None`` =
+    stays forever): the app issues one request every ``period`` cycles
+    from its arrival until (exclusive) its departure.  This is the
+    generator the fragmentation-heavy scheduler benchmarks use — sessions
+    that overlap and end at different times are exactly what carves holes
+    into a static pack.
+    """
+    if period <= 0:
+        raise ValueError("period must be positive")
+    arrivals: Dict[str, List[int]] = {}
+    departures: Dict[str, int] = {}
+    for app, arrive, depart in sessions:
+        if app in arrivals:
+            raise ValueError(f"duplicate session for app {app!r}")
+        if depart is not None and depart <= arrive:
+            raise ValueError(
+                f"session for {app!r} departs at {depart} but arrives "
+                f"at {arrive}")
+        end = depart if depart is not None else arrive + period
+        arrivals[app] = list(range(int(arrive), int(end), int(period)))
+        if depart is not None:
+            departures[app] = int(depart)
+    return TrafficTrace(arrivals, name=name,
+                        departures=departures or None)
 
 
 def flush_downtime_cycles(fabric: Fabric, hardened: bool = True) -> int:
@@ -138,6 +220,12 @@ class TrafficReport:
     trace_name: str
     freq_mhz: float
     per_app: Dict[str, AppTrafficStats] = field(default_factory=dict)
+    #: Default latency weight for :meth:`objective` — how many requests/s
+    #: of throughput one millisecond of mean request latency is worth.
+    #: Set per replay (``replay(..., latency_weight=)``); the historical
+    #: default of 1.0 is pinned by a regression test, since the online
+    #: scheduler consumes ``objective()`` as its admission score.
+    latency_weight: float = 1.0
 
     def rows(self) -> List[dict]:
         return [s.row() for s in self.per_app.values()]
@@ -161,19 +249,41 @@ class TrafficReport:
             "objective": round(self.objective(), 3),
         }
 
-    def objective(self, latency_weight: float = 1.0) -> float:
+    def objective(self, latency_weight: Optional[float] = None) -> float:
         """Scalar objective for the online scheduler, higher is better:
         total achieved throughput (requests/s) minus ``latency_weight``
         times the mean request latency in milliseconds.  Throughput pays
         for admission; queueing delay (and flush/reconfig downtime, which
         inflates it) argues for eviction or re-packing.
+
+        ``latency_weight=None`` uses the report's own
+        :attr:`latency_weight` (itself defaulting to 1.0, the historical
+        hard-coded value).
         """
         if not self.per_app:
             return 0.0
+        w = self.latency_weight if latency_weight is None else latency_weight
         thr = sum(s.achieved_rps for s in self.per_app.values())
         lat_ms = [s.mean_latency_cycles / (self.freq_mhz * 1e3)
                   for s in self.per_app.values()]
-        return thr - latency_weight * float(np.mean(lat_ms))
+        return thr - w * float(np.mean(lat_ms))
+
+    def app_objectives(self, latency_weight: Optional[float] = None
+                       ) -> Dict[str, float]:
+        """Per-app objective contributions (same weight semantics).
+
+        Each app's achieved throughput minus the weighted share of mean
+        latency it contributes; the contributions sum to
+        :meth:`objective`.  The scheduler's eviction policy ranks
+        residents by these.
+        """
+        if not self.per_app:
+            return {}
+        w = self.latency_weight if latency_weight is None else latency_weight
+        n = len(self.per_app)
+        return {name: s.achieved_rps
+                - w * (s.mean_latency_cycles / (self.freq_mhz * 1e3)) / n
+                for name, s in self.per_app.items()}
 
 
 def _service_cycles(result, iterations: Optional[int]) -> int:
@@ -195,16 +305,19 @@ def _service_cycles(result, iterations: Optional[int]) -> int:
                                             * per_iter))
 
 
-def replay(pack, trace: TrafficTrace,
-           iterations: Optional[int] = None) -> TrafficReport:
+def replay(pack, trace: TrafficTrace, iterations: Optional[int] = None,
+           latency_weight: float = 1.0) -> TrafficReport:
     """Replay ``trace`` against a :func:`compile_multi` pack.
 
     ``pack`` is a :class:`~repro.core.multi.MultiAppResult`; every app in
     the trace must be a resident.  ``iterations`` overrides the per-request
     problem size (None = each request runs the app's compiled iteration
-    count).  Pure queueing arithmetic — no simulation — so replaying
-    millions of requests is instant; the underlying cycle counts are the
-    schedule's, which the vectorized simulator backends validate.
+    count); ``latency_weight`` becomes the report's default
+    :meth:`TrafficReport.objective` weight (drivers may copy
+    ``CASCADE_SCHED_LATENCY_WEIGHT`` here).  Pure queueing arithmetic —
+    no simulation — so replaying millions of requests is instant; the
+    underlying cycle counts are the schedule's, which the vectorized
+    simulator backends validate.
     """
     freq = float(pack.summary.get("freq_mhz") or 0.0)
     if freq <= 0:
@@ -212,7 +325,7 @@ def replay(pack, trace: TrafficTrace,
     hardened = bool(pack.flush.hardened) if hasattr(pack, "flush") else True
     flush_cy = flush_downtime_cycles(pack.fabric, hardened=hardened)
     report = TrafficReport(pack_name=pack.name, trace_name=trace.name,
-                           freq_mhz=freq)
+                           freq_mhz=freq, latency_weight=latency_weight)
     residents = {r.app.name for r in pack.results}
     unknown = set(trace.arrivals) - residents
     if unknown:

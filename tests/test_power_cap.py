@@ -9,8 +9,9 @@ import pytest
 from repro.core import (ALL_APPS, DENSE_APPS, CascadeCompiler, CompileCache,
                         DesignCheckpoint, PassConfig, PassPipeline,
                         compile_key)
-from repro.core.passes import (DEFAULT_SCHEDULE, NAMED_SCHEDULES,
-                               POWER_CAPPED_SCHEDULE, resolve_schedule)
+from repro.core.passes import (DEFAULT_SCHEDULE, MULTI_POWER_CAPPED_SCHEDULE,
+                               NAMED_SCHEDULES, POWER_CAPPED_SCHEDULE,
+                               resolve_schedule)
 
 
 def _reg_state(design):
@@ -40,11 +41,14 @@ def test_named_schedule_resolution():
     assert resolve_schedule("power_capped") == POWER_CAPPED_SCHEDULE
     assert resolve_schedule(("build", "pnr")) == ("build", "pnr")
     assert set(NAMED_SCHEDULES) == {"default", "power_capped", "explore",
-                                    "multi"}
-    # the capped schedule is the default with post_pnr swapped out
+                                    "multi", "multi_power_capped"}
+    # the capped schedules are their base flows with post_pnr swapped out
     assert POWER_CAPPED_SCHEDULE == tuple(
         "power_capped_pipeline" if n == "post_pnr" else n
         for n in DEFAULT_SCHEDULE)
+    assert MULTI_POWER_CAPPED_SCHEDULE == tuple(
+        "power_capped_pipeline" if n == "post_pnr" else n
+        for n in NAMED_SCHEDULES["multi"])
 
 
 def test_unknown_named_schedule_raises():

@@ -7,7 +7,7 @@ import pytest
 from repro.core import (ALL_APPS, CascadeCompiler, CompileCache,
                         MultiAppSpec, PassConfig, Region, TrafficTrace,
                         flush_downtime_cycles, periodic_trace, poisson_trace,
-                        reconfig_cycles, replay)
+                        reconfig_cycles, replay, session_trace)
 from repro.core.interconnect import Fabric
 
 
@@ -144,3 +144,72 @@ def test_replay_rejects_non_resident_apps(pack):
     trace = periodic_trace(["harris"], period=100, n_requests=3)
     with pytest.raises(ValueError, match="non-resident"):
         replay(pack, trace)
+
+
+# ---------------------------------------------------------------------------
+# online traces: departures, event streams, windows, sessions
+# ---------------------------------------------------------------------------
+
+
+def test_departures_extend_horizon_and_order_events():
+    t = TrafficTrace({"a": [0, 100], "b": [50]}, name="online",
+                     departures={"a": 300})
+    assert t.horizon() == 300
+    assert t.arrival_of("a") == 0 and t.arrival_of("missing") is None
+    assert t.events() == [(0, "arrive", "a"), (50, "arrive", "b"),
+                          (300, "depart", "a")]
+    # at equal cycles the departure sorts first: the leaver frees its
+    # region before the simultaneous arrival claims one
+    t2 = TrafficTrace({"a": [0], "b": [200]}, departures={"a": 200})
+    assert t2.events()[1:] == [(200, "depart", "a"), (200, "arrive", "b")]
+
+
+def test_restricted_windows_arrivals_for_epoch_replay():
+    t = TrafficTrace({"a": [0, 100, 200], "b": [50, 250]},
+                     departures={"a": 220})
+    sub = t.restricted(["a"], 100, 220)
+    assert sub.arrivals == {"a": [100, 200]}
+    assert sub.departures is None
+    assert t.restricted(["a", "b"], 260, None).arrivals == {}
+
+
+def test_session_trace_requests_and_validation():
+    t = session_trace([("a", 0, 500), ("b", 100, None)], period=200,
+                      name="s")
+    assert t.arrivals["a"] == [0, 200, 400]
+    assert t.arrivals["b"] == [100]              # open-ended: one request
+    assert t.departures == {"a": 500}
+    with pytest.raises(ValueError, match="duplicate"):
+        session_trace([("a", 0, 100), ("a", 50, None)], period=10)
+    with pytest.raises(ValueError, match="departs"):
+        session_trace([("a", 100, 100)], period=10)
+    with pytest.raises(ValueError, match="period"):
+        session_trace([("a", 0, 100)], period=0)
+
+
+def test_objective_latency_weight_default_pinned(pack):
+    """Regression pin: the default latency weight is 1.0 — the online
+    scheduler consumes objective() as its admission score, so a silent
+    default change would reshuffle every admission decision."""
+    trace = periodic_trace(["unsharp", "vecadd"], period=2000,
+                           n_requests=8, phase=13)
+    rep = replay(pack, trace, iterations=256)
+    assert rep.latency_weight == 1.0
+    assert rep.objective() == pytest.approx(rep.objective(latency_weight=1.0))
+    # replay() threads a configurable weight into the report's default
+    heavy = replay(pack, trace, iterations=256, latency_weight=5.0)
+    assert heavy.latency_weight == 5.0
+    assert heavy.objective() == pytest.approx(
+        rep.objective(latency_weight=5.0))
+    assert heavy.objective() < rep.objective()
+
+
+def test_app_objectives_sum_to_objective(pack):
+    trace = periodic_trace(["unsharp", "vecadd"], period=2000,
+                           n_requests=8, phase=13)
+    rep = replay(pack, trace, iterations=256, latency_weight=2.0)
+    per_app = rep.app_objectives()
+    assert set(per_app) == {"unsharp", "vecadd"}
+    assert sum(per_app.values()) == pytest.approx(rep.objective())
+    assert sum(rep.app_objectives(latency_weight=0.0).values()) == \
+        pytest.approx(rep.objective(latency_weight=0.0))
