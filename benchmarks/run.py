@@ -43,7 +43,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="cascade|lm|roofline|pipeline|ablations|frontier|"
-                         "multi|pnr|sim|serve")
+                         "multi|pnr|sta|sim|serve")
     ap.add_argument("--fast", action="store_true",
                     help="reduced SA move counts / sweep grids for a quick "
                          "smoke run (tables keep their shape, lose accuracy)")
@@ -129,6 +129,11 @@ def main() -> None:
         results["pnr_kernels"] = section("pnr", lambda: pnr_kernels.run_all(
             fast=args.fast))
 
+    if args.only in (None, "sta"):
+        from benchmarks import sta_pipeline
+        results["sta"] = section("sta", lambda: sta_pipeline.run_all(
+            fast=args.fast))
+
     if args.only in (None, "sim"):
         from benchmarks import sim_throughput
         results["sim"] = section("sim", lambda: sim_throughput.run_all(
@@ -187,6 +192,11 @@ def main() -> None:
     # claim is attributable to the stage, not the cache
     if results.get("pnr_kernels"):
         record["pnr_kernels"] = results["pnr_kernels"]
+    # the vectorized-STA pipelining-loop speedups (and the explore
+    # end-to-end number) ride along so the >=5x incremental-loop claim is
+    # tracked per run
+    if results.get("sta"):
+        record["sta"] = results["sta"]
     # simulator backend head-to-head + traffic replay rows ride along so
     # the >=10x jax claim and the throughput objective are tracked per run
     if results.get("sim"):

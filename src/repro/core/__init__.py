@@ -8,7 +8,7 @@ Public API:
 """
 
 from .apps import ALL_APPS, DENSE_APPS, SPARSE_APPS, AppSpec
-from .branch_delay import (arrival_cycles_dfg, check_matched_dfg,
+from .branch_delay import (MatchPlan, arrival_cycles_dfg, check_matched_dfg,
                            check_matched_netlist, match_dfg, match_netlist)
 from .broadcast import broadcast_pipelining
 from .cache import (DEFAULT_CACHE, DEFAULT_STAGE_CACHE, CompileCache,
@@ -19,12 +19,13 @@ from .compiler import (BATCH_BACKENDS, CACHED_STAGES, BatchCompileError,
                        CascadeCompiler, CompileResult, MultiAppSpec,
                        PassConfig, compile_batch, compile_multi,
                        resident_config)
-from .config import (PNR_BACKENDS, SIM_BACKENDS, cache_dir,
+from .config import (PNR_BACKENDS, SIM_BACKENDS, STA_BACKENDS, cache_dir,
                      default_power_cap_mw, devices, disk_cache_enabled,
                      env_flag, env_float, env_int, force_host_device_count,
                      host_device_count, place_debug, pnr_backend,
                      sched_latency_weight, service_batch_window_s,
-                     service_max_batch, sim_backend, worker_count)
+                     service_max_batch, sim_backend, sta_backend,
+                     worker_count)
 from .dfg import DFG
 from .explore import (ExploreSpec, FrontierPoint, ParetoFrontier,
                       evaluate_candidate, explore_frontier, pareto_prune)
@@ -65,6 +66,7 @@ from .traffic import (AppTrafficStats, TrafficReport, TrafficTrace,
                       flush_downtime_cycles, periodic_trace, poisson_trace,
                       reconfig_cycles, replay, session_trace)
 from .sta import STAReport, analyze, sdf_simulate_fmax
+from .sta_vec import (IncrementalSTA, LoweredSTA, analyze_vec, lower_design)
 from .timing_model import TECH_NS, TimingModel, generate_timing_model
 from .unroll import max_copies, subfabric_for
 
@@ -91,6 +93,7 @@ __all__ = [
     "env_float", "env_int", "place_debug", "worker_count",
     "service_batch_window_s", "service_max_batch", "sched_latency_weight",
     "PNR_BACKENDS", "pnr_backend", "SIM_BACKENDS", "sim_backend",
+    "STA_BACKENDS", "sta_backend",
     "host_device_count", "force_host_device_count", "devices",
     "CompileContext", "Pass", "PassPipeline", "PASS_REGISTRY",
     "DEFAULT_SCHEDULE", "POWER_CAPPED_SCHEDULE", "EXPLORE_SCHEDULE",
@@ -104,7 +107,9 @@ __all__ = [
     "DFG", "Fabric", "Hop", "Tile", "Netlist", "RoutedDesign",
     "TimingModel", "TECH_NS", "generate_timing_model",
     "analyze", "sdf_simulate_fmax", "STAReport",
-    "match_dfg", "match_netlist", "check_matched_dfg", "check_matched_netlist",
+    "LoweredSTA", "IncrementalSTA", "lower_design", "analyze_vec",
+    "match_dfg", "match_netlist", "MatchPlan",
+    "check_matched_dfg", "check_matched_netlist",
     "arrival_cycles_dfg", "compute_pipelining", "collapse_reg_chains",
     "broadcast_pipelining", "post_pnr_pipeline", "PostPnRParams",
     "place", "PlaceParams", "placement_stats", "route", "RouteParams",

@@ -147,6 +147,76 @@ def match_netlist(nl: Netlist) -> int:
     return added
 
 
+class MatchPlan:
+    """:func:`match_netlist` split into invariant structure + arithmetic.
+
+    The post-PnR pipelining loop re-matches the netlist once per round, but
+    between rounds only branch ``n_regs`` counts change — the node set,
+    branch topology, and per-node pipeline latencies are frozen the moment
+    the design is routed.  This plan captures that invariant part once
+    (topo order, per-node in-branch lists, latencies, control-broadcast
+    groups); :meth:`run` then performs only the count arithmetic, in the
+    exact iteration order of :func:`match_netlist`, so the two are
+    byte-identical on any netlist the plan was built from.
+    """
+
+    def __init__(self, nl: Netlist):
+        into: Dict[str, List[Branch]] = {n: [] for n in nl.nodes}
+        for b in nl.branches:
+            if not b.control:
+                into[b.sink].append(b)
+        indeg = {n: 0 for n in nl.nodes}
+        adj: Dict[str, List[str]] = {n: [] for n in nl.nodes}
+        for b in nl.branches:
+            indeg[b.sink] += 1
+            adj[b.driver].append(b.sink)
+        stack = sorted(n for n, d in indeg.items() if d == 0)
+        order: List[str] = []
+        while stack:
+            n = stack.pop()
+            order.append(n)
+            for m in adj[n]:
+                indeg[m] -= 1
+                if indeg[m] == 0:
+                    stack.append(m)
+        pos = {name: i for i, name in enumerate(order)}
+        #: (node position, [(driver position, branch)], latency), topo order
+        self.steps: List[Tuple[int, List[Tuple[int, Branch]], int]] = [
+            (pos[name], [(pos[b.driver], b) for b in into[name]],
+             nl.nodes[name].pipeline_latency())
+            for name in order]
+        by_ctrl_driver: Dict[str, List[Branch]] = {}
+        for b in nl.branches:
+            if b.control:
+                by_ctrl_driver.setdefault(b.driver, []).append(b)
+        self.ctrl_groups: List[List[Branch]] = list(by_ctrl_driver.values())
+        self._arr = [0] * len(order)      # scratch; overwritten every run
+
+    def run(self) -> int:
+        """Re-match in place; returns #regs added.  Branch objects are held
+        by reference, so current ``n_regs`` counts are always read fresh."""
+        arr = self._arr
+        added = 0
+        for p, ins, lat in self.steps:
+            if ins:
+                arrivals = [arr[dp] + b.n_regs for dp, b in ins]
+                target = max(arrivals)
+                if min(arrivals) != target:
+                    for (dp, b), a in zip(ins, arrivals):
+                        if a < target:
+                            b.n_regs += target - a
+                            added += target - a
+                arr[p] = target + lat
+            else:
+                arr[p] = lat
+        for branches in self.ctrl_groups:
+            target = max(b.n_regs for b in branches)
+            for b in branches:
+                added += target - b.n_regs
+                b.n_regs = target
+        return added
+
+
 def check_matched_netlist(nl: Netlist) -> bool:
     arr = nl.arrival_cycles(domain="pipeline")
     into: Dict[str, Set[int]] = {}

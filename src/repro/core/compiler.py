@@ -82,6 +82,12 @@ class PassConfig:
     #: Parallel-tempering replica count for the jax placer (0 = the
     #: size-adaptive default); ignored by the scalar/numpy backends.
     pnr_replicas: int = 0
+    #: Timing-engine backend (``repro.core.config.STA_BACKENDS``:
+    #: ``"scalar"`` / ``"numpy"`` / ``"jax"``).  Drivers copy
+    #: ``CASCADE_STA_BACKEND`` here.  All backends are bit-identical
+    #: (see :mod:`repro.core.sta_vec`); it is a ``pipelined``-stage knob,
+    #: so routed-prefix stage artifacts are shared across backends.
+    sta_backend: str = "scalar"
     #: Power budget (mW) for the ``power_capped_pipeline`` pass; ``None``
     #: means unconstrained (byte-identical to the plain post-PnR pass).
     power_cap_mw: Optional[float] = None

@@ -32,6 +32,14 @@ knob lives here and is re-exported from :mod:`repro.core`:
                          "jax".  Driver-side only, like the power cap —
                          drivers copy it into ``PassConfig.pnr_backend``,
                          the compiler never reads it implicitly.
+    CASCADE_STA_BACKEND  default timing-analysis backend for the
+                         benchmark/driver CLIs: "scalar" (the oracle in
+                         ``repro.core.sta``), "numpy", or "jax" (the
+                         vectorized engine in ``repro.core.sta_vec``,
+                         bit-identical to the oracle).  Driver-side
+                         only — drivers copy it into
+                         ``PassConfig.sta_backend``; the library never
+                         reads it implicitly.
     CASCADE_SERVICE_BATCH_WINDOW_MS
                          how long the compile service's dispatcher holds
                          the queue open after the first request of a
@@ -220,6 +228,36 @@ def sim_backend(default: str = "interpreter") -> str:
         warnings.warn(
             f"ignoring unknown CASCADE_SIM_BACKEND={v!r} "
             f"(expected one of {SIM_BACKENDS}); falling back to "
+            f"{default!r}", UserWarning, stacklevel=2)
+        return default
+    return v
+
+
+#: The application-STA backends (``PassConfig.sta_backend`` / the
+#: ``backend=`` argument of :func:`repro.core.sta.analyze`).  ``scalar``
+#: is the node-by-node Python oracle; ``numpy`` and ``jax`` run the
+#: lowered level-propagation of :mod:`repro.core.sta_vec`, bit-identical
+#: to it (the sampled-delay ``rng`` mode always falls back to scalar).
+STA_BACKENDS = ("scalar", "numpy", "jax")
+
+
+def sta_backend(default: str = "scalar") -> str:
+    """Default timing-analysis backend (``CASCADE_STA_BACKEND``).
+
+    Driver-side only, exactly like :func:`pnr_backend`: benchmark CLIs
+    and examples copy the value into ``PassConfig.sta_backend`` (or the
+    ``backend=`` argument of :func:`repro.core.sta.analyze`) — the
+    library never reads the env var implicitly, keeping cache keys
+    faithful.  An unknown value warns and falls back to ``default``.
+    """
+    v = os.environ.get("CASCADE_STA_BACKEND")
+    if v is None or not v.strip():
+        return default
+    v = v.strip().lower()
+    if v not in STA_BACKENDS:
+        warnings.warn(
+            f"ignoring unknown CASCADE_STA_BACKEND={v!r} "
+            f"(expected one of {STA_BACKENDS}); falling back to "
             f"{default!r}", UserWarning, stacklevel=2)
         return default
     return v

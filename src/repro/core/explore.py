@@ -217,7 +217,9 @@ def evaluate_candidate(design: RoutedDesign, tm: TimingModel,
                        stall_factor: float = 0.0,
                        max_iters: int = 400,
                        default_budget: Optional[int] = None,
-                       copy_design: bool = True) -> FrontierPoint:
+                       copy_design: bool = True,
+                       sta_backend: str = "scalar",
+                       lowering=None) -> FrontierPoint:
     """Evaluate one (budget, cap) sweep point on a fork of ``design``.
 
     With ``copy_design`` (default) the input design is never mutated —
@@ -231,16 +233,24 @@ def evaluate_candidate(design: RoutedDesign, tm: TimingModel,
     single-source-of-truth chain the report passes use — so the returned
     numbers are byte-identical to an independent full compile with
     ``post_pnr_budget=register_budget`` / ``power_cap_mw=power_cap_mw``.
+
+    ``lowering`` is the shared :class:`~repro.core.sta_vec.LoweredSTA`
+    of the routed baseline: it depends only on route structure, which
+    every fork shares, so the frontier sweep lowers the design once and
+    every point re-times through the same arrays (bit-identical to the
+    scalar oracle either way).
     """
     d = copy.deepcopy(design) if copy_design else design
     budget = register_budget if register_budget is not None else default_budget
     params = PostPnRParams(max_iters=max_iters, register_budget=budget)
     res = power_capped_pipeline(d, tm, energy, iterations,
                                 cap_mw=power_cap_mw, params=params,
-                                stall_factor=stall_factor)
+                                stall_factor=stall_factor,
+                                sta_backend=sta_backend, lowering=lowering)
     final = evaluate_point(d, tm, energy, iterations,
                            stall_factor=stall_factor,
-                           round_index=len(res.trajectory) - 1)
+                           round_index=len(res.trajectory) - 1,
+                           sta_backend=sta_backend)
     return FrontierPoint(
         register_budget=register_budget, power_cap_mw=power_cap_mw,
         critical_path_ns=final.critical_path_ns, freq_mhz=final.freq_mhz,
@@ -286,7 +296,8 @@ def explore_frontier(design: RoutedDesign, tm: TimingModel,
                      stall_factor: float = 0.0,
                      max_iters: int = 400,
                      default_budget: Optional[int] = None,
-                     point_map: Optional[PointMap] = None) -> ParetoFrontier:
+                     point_map: Optional[PointMap] = None,
+                     sta_backend: str = "scalar") -> ParetoFrontier:
     """Sweep the post-PnR design space and materialize the selected point.
 
     Evaluates every ``(register_budget, power_cap_mw)`` grid point on a
@@ -299,9 +310,15 @@ def explore_frontier(design: RoutedDesign, tm: TimingModel,
     spec = (spec or ExploreSpec()).validate()
     points = spec.points()
     baseline = evaluate_point(design, tm, energy, iterations,
-                              stall_factor=stall_factor, round_index=0)
+                              stall_factor=stall_factor, round_index=0,
+                              sta_backend=sta_backend)
+    lowering = None
+    if sta_backend != "scalar":
+        from .sta_vec import lower_design
+        lowering = lower_design(design, tm)   # one lowering, all points
     kwargs = {"stall_factor": stall_factor, "max_iters": max_iters,
-              "default_budget": default_budget}
+              "default_budget": default_budget,
+              "sta_backend": sta_backend, "lowering": lowering}
     mapper = point_map or map_points_serial
     results = mapper(design, tm, energy, iterations, points, kwargs)
     if len(results) != len(points):

@@ -63,7 +63,8 @@ class DesignMetrics:
 def evaluate_design(design: RoutedDesign, tm: TimingModel,
                     energy: EnergyParams, iterations: int,
                     stall_factor: float = 0.0,
-                    rep: Optional[STAReport] = None) -> DesignMetrics:
+                    rep: Optional[STAReport] = None,
+                    sta_backend: str = "scalar") -> DesignMetrics:
     """Project the design's *current* state into a :class:`DesignMetrics`.
 
     Runs application STA (or reuses ``rep`` if the caller already analyzed
@@ -72,9 +73,12 @@ def evaluate_design(design: RoutedDesign, tm: TimingModel,
     at the achievable frequency.  Deterministic: two calls on equal design
     states return bit-equal numbers, which is what lets the power-cap
     controller and the frontier sweep promise byte-identity with the
-    report passes.
+    report passes.  ``sta_backend`` selects the timing engine
+    (``scalar`` / ``numpy`` / ``jax`` — bit-identical, see
+    :mod:`repro.core.sta_vec`).
     """
-    rep = rep if rep is not None else analyze(design, tm)
+    rep = rep if rep is not None else analyze(design, tm,
+                                              backend=sta_backend)
     sched = schedule_round2(design, iterations, stall_factor=stall_factor)
     pr = power_report(design, rep.max_freq_mhz, sched, energy)
     return DesignMetrics(sta=rep, schedule=sched, power=pr)

@@ -193,10 +193,36 @@ class RoutedDesign:
     fabric: Fabric
     unroll_copies: int = 1           # low-unrolling duplication factor
     source_dfg: Optional[DFG] = None # pre-extraction DFG (physical reg count)
+    #: lazy ``(driver, sink) -> branch key`` index (see
+    #: :meth:`branch_key_between`); never part of equality/serialization
+    #: semantics — it is derivable from ``routes`` at any time.
+    _pair_index: Optional[Dict[Tuple[str, str], Tuple[str, str, int]]] = \
+        field(default=None, repr=False, compare=False)
 
     @property
     def dfg(self) -> DFG:
         return self.netlist.to_dfg()
+
+    def branch_key_between(self, driver: str, sink: str
+                           ) -> Optional[Tuple[str, str, int]]:
+        """The first route key connecting ``driver`` to ``sink`` (the
+        lowest-port branch, matching a linear scan over ``routes``), or
+        ``None``.
+
+        Post-PnR pipelining asks this for every consecutive node pair of
+        every round's critical path; the O(routes) scan it used to do per
+        query is replaced by an index built lazily on first use and never
+        invalidated — the route *set* is immutable once the design is
+        routed (pipelining only mutates register sites along existing
+        routes).  A regression test pins index-vs-scan agreement.
+        """
+        idx = self._pair_index
+        if idx is None:
+            idx = {}
+            for key in self.routes:
+                idx.setdefault((key[0], key[1]), key)
+            self._pair_index = idx
+        return idx.get((driver, sink))
 
     def hop_usage(self) -> Dict[Tuple[Tile, Tile, int], int]:
         """Track demand per directed tile boundary, deduplicating the shared

@@ -283,6 +283,7 @@ CONFIG_FIELD_STAGE: Dict[str, str] = {
     "post_pnr_iters": "pipelined",
     "power_cap_mw": "pipelined",
     "explore": "pipelined",
+    "sta_backend": "pipelined",      # bit-identical engines; routed shared
 }
 
 
@@ -633,7 +634,8 @@ def _post_pnr(ctx: CompileContext):
     """Post-PnR register insertion on the routed design (Section V-D)."""
     ctx.require(design=ctx.design, place_timing=ctx.place_timing)
     ppr = post_pnr_pipeline(ctx.design, ctx.place_timing,
-                            _post_pnr_params(ctx))
+                            _post_pnr_params(ctx),
+                            sta_backend=ctx.config.sta_backend)
     ctx.post_pnr = ppr
     return {"initial_ns": ppr.initial_ns, "final_ns": ppr.final_ns,
             "registers_added": ppr.registers_added, "stop": ppr.stop_reason}
@@ -651,7 +653,7 @@ def _power_capped(ctx: CompileContext):
     res = power_capped_pipeline(
         ctx.design, ctx.place_timing, ctx.energy, iters,
         cap_mw=ctx.config.power_cap_mw, params=_post_pnr_params(ctx),
-        stall_factor=stall)
+        stall_factor=stall, sta_backend=ctx.config.sta_backend)
     ctx.post_pnr = res.post_pnr
     ctx.power_cap = res
     return res.summary()
@@ -686,7 +688,8 @@ def _pareto_frontier(ctx: CompileContext):
                           spec, stall_factor=stall,
                           max_iters=base.max_iters,
                           default_budget=base.register_budget,
-                          point_map=ctx.point_map)
+                          point_map=ctx.point_map,
+                          sta_backend=ctx.config.sta_backend)
     ctx.frontier = fr
     ctx.post_pnr = fr.selected.result.post_pnr
     ctx.power_cap = fr.selected.result
@@ -733,7 +736,8 @@ def _metrics_of(ctx: CompileContext) -> DesignMetrics:
         ctx.require(design=ctx.design, place_timing=ctx.place_timing)
         iters, stall = _iterations_and_stall(ctx)
         ctx.metrics = evaluate_design(ctx.design, ctx.place_timing,
-                                      ctx.energy, iters, stall_factor=stall)
+                                      ctx.energy, iters, stall_factor=stall,
+                                      sta_backend=ctx.config.sta_backend)
     return ctx.metrics
 
 

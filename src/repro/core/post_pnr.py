@@ -23,7 +23,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Set, Tuple
 
-from .branch_delay import match_netlist
+from .branch_delay import MatchPlan
 from .netlist import RoutedDesign
 from .sta import STAReport, analyze
 from .timing_model import TimingModel
@@ -99,7 +99,7 @@ def _segment_candidates(design: RoutedDesign, tm: TimingModel,
     for a, b in zip(path, path[1:]):
         # identify the branch and hop range between consecutive path elements
         if a[0] == "node" and b[0] == "node":
-            bkey, lo, hi = _find_branch(design, a[1], b[1]), None, None
+            bkey, lo, hi = design.branch_key_between(a[1], b[1]), None, None
             if bkey is None:
                 cum += tm.core_delay(_kind(design, a[1]))
                 continue
@@ -134,6 +134,10 @@ def _kind(design: RoutedDesign, name: str) -> str:
 
 
 def _find_branch(design: RoutedDesign, driver: str, sink: str):
+    """The original O(routes) scan.  Kept as the reference semantics for
+    :meth:`RoutedDesign.branch_key_between` (the lazy index that replaced
+    it on the hot path); a regression test asserts they agree on every
+    pair."""
     for key, rb in design.routes.items():
         if key[0] == driver and key[1] == sink:
             return key
@@ -148,14 +152,97 @@ def _find_branch(design: RoutedDesign, driver: str, sink: str):
 RoundHook = Callable[[RoutedDesign, STAReport], bool]
 
 
+@dataclass
+class _RoundDelta:
+    """Cheap per-round undo record, replacing the full
+    :class:`DesignCheckpoint` the loop used to capture every round.
+
+    A round mutates exactly two things: it *adds* register sites to some
+    routes (the chosen site plus whatever ``_add_regs_balanced``
+    materializes — recorded in ``added`` as they happen) and rewrites
+    ``Branch.n_regs`` counts (matching only ever increments, but
+    arbitrarily many branches — captured up front as one int list,
+    positionally aligned with ``netlist.branches``, which is frozen
+    during the loop).  The old capture copied every route's ``reg_hops``
+    set, O(total hops) of set allocation per round; profiling the
+    harris x4 pipelining stage put that at roughly a quarter of non-STA
+    loop time.  Undoing from the delta restores byte-identical state
+    (set membership and counts), pinned by the ``PostPnRResult.history``
+    byte-identity tests.
+    """
+
+    n_regs: List[int]
+    added: List[Tuple[Tuple, int]] = field(default_factory=list)
+
+    @classmethod
+    def capture(cls, design: RoutedDesign) -> "_RoundDelta":
+        return cls(n_regs=[b.n_regs for b in design.netlist.branches])
+
+    def undo(self, design: RoutedDesign) -> None:
+        for key, i in reversed(self.added):
+            design.routes[key].reg_hops.discard(i)
+        for b, n in zip(design.netlist.branches, self.n_regs):
+            b.n_regs = n
+
+
+class _ScalarEngine:
+    """The oracle path behind the engine seam: every analyze re-walks the
+    netlist via :func:`repro.core.sta.analyze`; notifications are no-ops."""
+
+    backend = "scalar"
+
+    def __init__(self, design: RoutedDesign, tm: TimingModel):
+        self.design, self.tm = design, tm
+
+    def analyze(self) -> STAReport:
+        return analyze(self.design, self.tm)
+
+    def segment_candidates(self, rep: STAReport):
+        return _segment_candidates(self.design, self.tm, rep)
+
+    def notify_added(self, sites) -> None:
+        pass
+
+    def notify_removed(self, sites) -> None:
+        pass
+
+    def resync(self) -> None:
+        pass
+
+
+def _make_engine(design: RoutedDesign, tm: TimingModel, sta_backend: str,
+                 lowering=None):
+    if sta_backend == "scalar":
+        return _ScalarEngine(design, tm)
+    from .sta_vec import IncrementalSTA
+    return IncrementalSTA(design, tm, backend=sta_backend, lowering=lowering)
+
+
 def post_pnr_pipeline(design: RoutedDesign, tm: TimingModel,
                       params: Optional[PostPnRParams] = None,
-                      round_hook: Optional[RoundHook] = None) -> PostPnRResult:
+                      round_hook: Optional[RoundHook] = None,
+                      sta_backend: str = "scalar",
+                      lowering=None) -> PostPnRResult:
+    """The Section V-D register-insertion loop.
+
+    ``sta_backend`` selects the timing engine: ``"scalar"`` re-walks the
+    netlist every round (the oracle); ``"numpy"`` / ``"jax"`` keep a
+    :class:`~repro.core.sta_vec.IncrementalSTA` alive across rounds, so
+    each insertion re-propagates only the dirty fanout cone of the edited
+    hops (optionally reusing a caller-supplied ``lowering`` of the routed
+    structure).  All backends produce byte-identical designs, histories,
+    and stop reasons — one shared loop drives an engine seam, so the
+    control flow cannot drift, and the engines' reports are bit-identical
+    by construction (asserted in tests and benchmarks).
+    """
     p = params or PostPnRParams()
-    rep = analyze(design, tm)
+    engine = _make_engine(design, tm, sta_backend, lowering)
+    # branch topology is frozen during the loop; precompute the match
+    # structure once instead of re-toposorting the netlist every round
+    match_plan = MatchPlan(design.netlist)
+    rep = engine.analyze()
     initial = rep.critical_path_ns
     history = [initial]
-    added_total = 0
     stall = 0
     reason = "max_iters"
 
@@ -163,7 +250,7 @@ def post_pnr_pipeline(design: RoutedDesign, tm: TimingModel,
         if p.target_ns and rep.critical_path_ns <= p.target_ns:
             reason = "target_reached"
             break
-        cands = _segment_candidates(design, tm, rep)
+        cands = engine.segment_candidates(rep)
         if not cands:
             reason = "core_bound"  # segment has no free register site
             break
@@ -171,29 +258,34 @@ def post_pnr_pipeline(design: RoutedDesign, tm: TimingModel,
         total = rep.critical_path_ns - tm.sequential_overhead()
         bkey, hop_idx, _ = min(cands, key=lambda c: abs(c[2] - total / 2.0))
 
-        snap = DesignCheckpoint.capture(design)    # for in-loop revert
+        delta = _RoundDelta.capture(design)        # for in-loop revert
 
         rb = design.routes[bkey]
         rb.reg_hops.add(hop_idx)
+        delta.added.append((bkey, hop_idx))
         rb.branch.n_regs += 1
-        added = 1 + match_netlist(design.netlist)
+        added = 1 + match_plan.run()
         # materialize matching registers on routes (keep manually placed sites)
-        for rb2 in design.routes.values():
+        for key2, rb2 in design.routes.items():
             want = rb2.branch.n_regs
             have = len(rb2.reg_hops)
             if have < want:
-                _add_regs_balanced(rb2, want - have)
+                for idx in _add_regs_balanced(rb2, want - have):
+                    delta.added.append((key2, idx))
+        engine.notify_added(delta.added)
 
         if p.register_budget is not None and \
                 design.netlist.added_registers() > p.register_budget:
-            snap.restore(design)
+            delta.undo(design)
+            engine.notify_removed(delta.added)
             reason = "register_budget"
             break
 
-        new_rep = analyze(design, tm)
+        new_rep = engine.analyze()
         reverted = False
         if new_rep.critical_path_ns > rep.critical_path_ns:
-            snap.restore(design)
+            delta.undo(design)
+            engine.notify_removed(delta.added)
             new_rep = rep
             reverted = True
         # budget hook: consulted on every round that changed the design,
@@ -201,7 +293,8 @@ def post_pnr_pipeline(design: RoutedDesign, tm: TimingModel,
         # spends a register and must not slip past an external budget
         if round_hook is not None and not reverted \
                 and not round_hook(design, new_rep):
-            rep = analyze(design, tm)    # the hook may have rewound the design
+            engine.resync()              # the hook may have rewound the design
+            rep = engine.analyze()
             history.append(rep.critical_path_ns)
             reason = "round_hook"
             break
@@ -214,7 +307,6 @@ def post_pnr_pipeline(design: RoutedDesign, tm: TimingModel,
                 break
         else:
             stall = 0
-            added_total = design.netlist.added_registers()
         rep = new_rep
         history.append(rep.critical_path_ns)
 
@@ -225,15 +317,19 @@ def post_pnr_pipeline(design: RoutedDesign, tm: TimingModel,
         history=history, stop_reason=reason)
 
 
-def _add_regs_balanced(rb, k: int):
-    """Add k registers to free hop sites, spreading across the route."""
+def _add_regs_balanced(rb, k: int) -> List[int]:
+    """Add k registers to free hop sites, spreading across the route.
+    Returns the hop indices actually added (the loop's undo record)."""
     free = [i for i in range(len(rb.hops)) if i not in rb.reg_hops]
+    out: List[int] = []
     if not free:
-        return  # zero-hop or saturated branch: register absorbed at tile input
+        return out  # zero-hop or saturated branch: absorbed at tile input
     step = max(1, len(free) // (k + 1))
     for j in range(k):
         if not free:
             break
         idx = free[min(len(free) - 1, (j + 1) * step)] if len(free) > 1 else free[0]
         rb.reg_hops.add(idx)
+        out.append(idx)
         free.remove(idx)
+    return out

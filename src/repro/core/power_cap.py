@@ -103,7 +103,8 @@ def evaluate_point(design: RoutedDesign, tm: TimingModel,
                    energy: EnergyParams, iterations: int,
                    stall_factor: float = 0.0,
                    rep: Optional[STAReport] = None,
-                   round_index: int = 0) -> ParetoPoint:
+                   round_index: int = 0,
+                   sta_backend: str = "scalar") -> ParetoPoint:
     """Project (freq, power, EDP, registers) for the design's current state.
 
     A thin wrapper over :func:`repro.core.metrics.evaluate_design` — the
@@ -113,7 +114,8 @@ def evaluate_point(design: RoutedDesign, tm: TimingModel,
     already computed for this state.
     """
     m = evaluate_design(design, tm, energy, iterations,
-                        stall_factor=stall_factor, rep=rep)
+                        stall_factor=stall_factor, rep=rep,
+                        sta_backend=sta_backend)
     return ParetoPoint(round=round_index,
                        critical_path_ns=m.critical_path_ns,
                        freq_mhz=m.freq_mhz,
@@ -126,7 +128,9 @@ def power_capped_pipeline(design: RoutedDesign, tm: TimingModel,
                           energy: EnergyParams, iterations: int,
                           cap_mw: Optional[float] = None,
                           params: Optional[PostPnRParams] = None,
-                          stall_factor: float = 0.0) -> PowerCapResult:
+                          stall_factor: float = 0.0,
+                          sta_backend: str = "scalar",
+                          lowering=None) -> PowerCapResult:
     """Post-PnR pipelining under a power budget.
 
     Runs the Section V-D register-insertion loop, but after every
@@ -137,10 +141,16 @@ def power_capped_pipeline(design: RoutedDesign, tm: TimingModel,
     disables the budget entirely: the inner loop runs exactly as the
     plain ``post_pnr`` pass would, and only the trajectory is recorded —
     results are byte-identical to the unconstrained flow.
+
+    ``sta_backend`` / ``lowering`` flow to the inner loop and the
+    per-round projections (see :mod:`repro.core.sta_vec`): the loop keeps
+    an incremental engine alive across rounds; every report stays
+    bit-identical to the scalar oracle.
     """
     cap = None if (cap_mw is None or not math.isfinite(cap_mw)) else cap_mw
     initial = evaluate_point(design, tm, energy, iterations,
-                             stall_factor=stall_factor, round_index=0)
+                             stall_factor=stall_factor, round_index=0,
+                             sta_backend=sta_backend)
 
     if cap is not None and initial.power_mw > cap:
         # Even the matched, un-pipelined input exceeds the cap: the pass
@@ -175,7 +185,8 @@ def power_capped_pipeline(design: RoutedDesign, tm: TimingModel,
             ckpt = DesignCheckpoint.capture(d)
         return True
 
-    ppr = post_pnr_pipeline(design, tm, params, round_hook=hook)
+    ppr = post_pnr_pipeline(design, tm, params, round_hook=hook,
+                            sta_backend=sta_backend, lowering=lowering)
     # Every stop path leaves the design in its last hook-accepted state
     # (reverted rounds never reach the hook), so the last trajectory point
     # is always the final state — no re-evaluation needed.

@@ -83,7 +83,18 @@ class _Sampler:
 def analyze(design: RoutedDesign, tm: TimingModel,
             rng: Optional[np.random.Generator] = None,
             sigma_lo: float = 0.6,
-            clock_granularity_ns: float = 0.0) -> STAReport:
+            clock_granularity_ns: float = 0.0,
+            backend: str = "scalar") -> STAReport:
+    """Application STA.  ``backend`` selects the engine: ``"scalar"`` is
+    this module's node-by-node walk (the oracle); ``"numpy"`` / ``"jax"``
+    run the lowered whole-level propagation of :mod:`repro.core.sta_vec`,
+    bit-identical to it.  The sampled-delay path (``rng``) draws one
+    factor per component *instance* in visit order, so it always runs on
+    the scalar walk regardless of ``backend``."""
+    if backend != "scalar" and rng is None:
+        from .sta_vec import analyze_vec
+        return analyze_vec(design, tm, backend=backend,
+                           clock_granularity_ns=clock_granularity_ns)
     nl, fabric = design.netlist, design.fabric
     sample = _Sampler(rng, sigma_lo)
     overhead = tm.sequential_overhead()

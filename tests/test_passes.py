@@ -245,6 +245,8 @@ def test_compile_key_covers_every_config_field():
                        c.fabric, c.timing, c.energy) != base
     assert compile_key(app, replace(base_cfg, explore=ExploreSpec()),
                        c.fabric, c.timing, c.energy) != base
+    assert compile_key(app, replace(base_cfg, sta_backend="numpy"),
+                       c.fabric, c.timing, c.energy) != base
 
 
 def test_compile_key_covers_every_explore_spec_subfield():
