@@ -1,0 +1,154 @@
+"""Predicated control-flow benchmark: compile + simulate the CONTROL_APPS.
+
+The predication refactor (PR 10) claims branch/loop workloads ride the
+same flow as the paper's straight-line apps with no special-casing.  This
+bench holds that to numbers:
+
+* **compile leg** — unpipelined vs fully-pipelined compiles of the three
+  predicated apps (`thresh_conv`, `clip_pipe`, `refine`) next to the
+  straight-line baselines (gaussian, unsharp, harris), reporting
+  frequency, EDP, registers, and the pipelining speedup ratio;
+* **sim leg** — 3-way backend bit-identity (interpreter / numpy / jax)
+  on every predicated app, with per-backend wall times;
+* **band checks** — the pipelined predicated apps must land in the
+  straight-line frequency band (within slack) and gain the same order of
+  EDP improvement from pipelining.
+
+    PYTHONPATH=src python -m benchmarks.control_flow [--fast]
+        [--bench-out BENCH_cf.json]
+
+``benchmarks.run`` drives this as the ``cf`` section (``--only cf``) and
+folds the rows into its trajectory record.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from benchmarks._util import (append_bench_record, apply_pnr_backend,
+                              print_batch_stats, print_csv)
+from repro.core.apps import ALL_APPS, CONTROL_APPS
+from repro.core.compiler import CascadeCompiler, PassConfig
+
+MOVES = 120
+FAST_MOVES = 40
+SIM_CYCLES = 1024
+FAST_SIM_CYCLES = 256
+BASELINES = ("gaussian", "unsharp", "harris")
+
+#: Pipelined predicated apps may not fall below the straight-line
+#: frequency band by more than this factor (they may exceed it freely).
+FREQ_BAND_SLACK = 0.85
+#: Pipelining must buy at least this EDP ratio on every predicated app —
+#: the same order of improvement the paper's dense table shows.
+MIN_EDP_RATIO = 1.5
+
+
+def compile_rows(compiler: CascadeCompiler, moves: int = MOVES) -> List[Dict]:
+    """Unpipelined vs full compiles: predicated apps + straight baselines."""
+    apps = list(CONTROL_APPS) + list(BASELINES)
+    configs = (PassConfig.unpipelined(place_moves=moves),
+               PassConfig.full(place_moves=moves))
+    pairs = [(a, cfg) for a in apps for cfg in configs]
+    results = compiler.compile_batch([(ALL_APPS[a], cfg) for a, cfg in pairs])
+    rows = []
+    base: Dict[str, Dict] = {}
+    for (app, cfg), r in zip(pairs, results):
+        rec = {"freq_mhz": r.sta.max_freq_mhz, "edp": r.power.edp_js,
+               "regs": r.design.physical_register_count()}
+        if not cfg.compute_pipelining:
+            base[app] = rec
+        rows.append({"app": app,
+                     "kind": "predicated" if app in CONTROL_APPS
+                             else "straight",
+                     "pipelined": int(cfg.compute_pipelining),
+                     "freq_mhz": round(rec["freq_mhz"], 1),
+                     "edp_ratio": round(base[app]["edp"] / rec["edp"], 2),
+                     "registers": rec["regs"]})
+    print_batch_stats(compiler, "control_flow")
+    print_csv(rows, "control_flow_compile (unpipelined vs full)")
+    return rows
+
+
+def sim_rows(fast: bool = False) -> List[Dict]:
+    """3-backend bit identity + wall time on every predicated app."""
+    from repro.core import simulate
+
+    cycles = FAST_SIM_CYCLES if fast else SIM_CYCLES
+    rows = []
+    for name, spec in sorted(CONTROL_APPS.items()):
+        g = spec.build(1)
+        rng = np.random.default_rng(0)
+        ins = {n: rng.integers(0, 0x10000, size=cycles).tolist()
+               for n, nd in g.nodes.items() if nd.kind == "input"}
+        t0 = time.perf_counter()
+        ref = simulate(g, ins, cycles)
+        t_interp = time.perf_counter() - t0
+        row = {"app": name, "cycles": cycles,
+               "interp_s": round(t_interp, 4)}
+        for backend in ("numpy", "jax"):
+            t0 = time.perf_counter()
+            out = simulate(g, ins, cycles, backend=backend)
+            row[f"{backend}_s"] = round(time.perf_counter() - t0, 4)
+            assert out == ref, f"{name}: {backend} diverged from interpreter"
+        row["bit_identical"] = 1
+        rows.append(row)
+    print_csv(rows, "control_flow_sim (3-backend bit identity)")
+    return rows
+
+
+def band_checks(rows: List[Dict]) -> List[str]:
+    """Assert the predicated apps land in the straight-line bands."""
+    full = [r for r in rows if r["pipelined"]]
+    straight = [r for r in full if r["kind"] == "straight"]
+    pred = [r for r in full if r["kind"] == "predicated"]
+    lo = min(r["freq_mhz"] for r in straight)
+    hi = max(r["freq_mhz"] for r in straight)
+    lines = []
+    for r in pred:
+        ok = r["freq_mhz"] >= lo * FREQ_BAND_SLACK
+        assert ok, (f"{r['app']}: pipelined {r['freq_mhz']} MHz below the "
+                    f"straight-line band [{lo}, {hi}]")
+        lines.append(f"  {r['app']:12s} freq {r['freq_mhz']:7.1f} MHz   "
+                     f"straight band [{lo:.1f}, {hi:.1f}]   OK")
+        assert r["edp_ratio"] >= MIN_EDP_RATIO, \
+            (f"{r['app']}: pipelining EDP ratio {r['edp_ratio']} < "
+             f"{MIN_EDP_RATIO}x")
+        lines.append(f"  {r['app']:12s} EDP gain {r['edp_ratio']:5.2f}x   "
+                     f"(floor {MIN_EDP_RATIO}x)   OK")
+    return lines
+
+
+def run_all(fast: bool = False, backend: str = "auto",
+            workers: Optional[int] = None,
+            backend_pnr: Optional[str] = None,
+            bench_out: Optional[str] = None) -> Dict[str, List[Dict]]:
+    compiler = apply_pnr_backend(
+        CascadeCompiler(batch_backend=backend, batch_workers=workers),
+        backend_pnr)
+    moves = FAST_MOVES if fast else MOVES
+    rows = compile_rows(compiler, moves=moves)
+    sims = sim_rows(fast=fast)
+    print("\n== control-flow band check ==")
+    for line in band_checks(rows):
+        print(line)
+    out = {"compile": rows, "sim": sims}
+    if bench_out:
+        append_bench_record(bench_out, {"fast": fast, **out})
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--bench-out", default="BENCH_cf.json")
+    args = ap.parse_args()
+    run_all(fast=args.fast, bench_out=args.bench_out)
+
+
+if __name__ == "__main__":
+    main()

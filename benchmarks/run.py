@@ -43,7 +43,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="cascade|lm|roofline|pipeline|ablations|frontier|"
-                         "multi|pnr|sta|sim|serve")
+                         "multi|pnr|sta|sim|serve|cf")
     ap.add_argument("--fast", action="store_true",
                     help="reduced SA move counts / sweep grids for a quick "
                          "smoke run (tables keep their shape, lose accuracy)")
@@ -144,6 +144,12 @@ def main() -> None:
         results["serve"] = section("serve", lambda: serve_online.run_all(
             fast=args.fast))
 
+    if args.only in (None, "cf"):
+        from benchmarks import control_flow
+        results["cf"] = section("cf", lambda: control_flow.run_all(
+            fast=args.fast, backend=args.backend, workers=args.workers,
+            backend_pnr=backend_pnr, bench_out="BENCH_cf.json"))
+
     # ----- headline band checks (paper abstract) -------------------------
     if "dense_table" in results:
         print("\n== Paper band check ==")
@@ -203,6 +209,10 @@ def main() -> None:
         record["sim"] = results["sim"]
     # online-vs-static serving headline rides along so the scheduler's
     # win margin on fragmentation-heavy traces is tracked per run
+    # the predicated-app freq/EDP rows ride along so control-flow apps'
+    # parity with the straight-line suite is tracked per run
+    if results.get("cf"):
+        record["cf"] = results["cf"]["compile"]
     if results.get("serve"):
         record["serve"] = {
             name: {"objective_gain": r["objective_gain"],

@@ -7,7 +7,8 @@ Public API:
     DENSE_APPS / SPARSE_APPS benchmark suites
 """
 
-from .apps import ALL_APPS, DENSE_APPS, SPARSE_APPS, AppSpec
+from .apps import (ALL_APPS, CONTROL_APPS, DENSE_APPS, SPARSE_APPS,
+                   AppSpec)
 from .branch_delay import (MatchPlan, arrival_cycles_dfg, check_matched_dfg,
                            check_matched_netlist, match_dfg, match_netlist)
 from .broadcast import broadcast_pipelining
@@ -71,7 +72,7 @@ from .timing_model import TECH_NS, TimingModel, generate_timing_model
 from .unroll import max_copies, subfabric_for
 
 __all__ = [
-    "ALL_APPS", "DENSE_APPS", "SPARSE_APPS", "AppSpec",
+    "ALL_APPS", "CONTROL_APPS", "DENSE_APPS", "SPARSE_APPS", "AppSpec",
     "CascadeCompiler", "CompileResult", "PassConfig", "compile_batch",
     "BATCH_BACKENDS", "BatchCompileError",
     "MultiAppSpec", "MultiAppResult", "compile_multi", "PackingError",

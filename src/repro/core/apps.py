@@ -15,6 +15,11 @@ graphs — scanners over compressed levels, intersect/union joiners, value
 loads, ALUs and reductions — with ready-valid FIFOs at the input of every
 compute unit (the sparse compiler applies compute pipelining by default,
 Section VIII-D).
+
+Predicated control-flow apps (``CONTROL_APPS``, PR 10) exercise the
+``PRED_PORT`` band end to end: a thresholded conv with predicated
+accumulate, a sel-based clip/saturate pipeline, and a bounded while-style
+iterative refinement unrolled with per-lane exit predicates.
 """
 
 from __future__ import annotations
@@ -22,7 +27,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
-from .dfg import CONST, DFG, FIFO, INPUT, MEM, OUTPUT, PE, RF
+from .dfg import CONST, DFG, FIFO, INPUT, MEM, OUTPUT, PE, PRED_PORT, RF
 
 
 # ---------------------------------------------------------------------------
@@ -225,6 +230,88 @@ def build_resnet(copy: int, g: DFG, width: int):
 
 
 # ---------------------------------------------------------------------------
+# predicated control-flow app builders (PR 10)
+# ---------------------------------------------------------------------------
+
+def _pred_pe(g: DFG, op: str, *srcs: str, pred: str) -> str:
+    """PE with data operands plus a predicate edge in the PRED_PORT band."""
+    n = g.add(PE, op=op)
+    for i, s in enumerate(srcs):
+        g.connect(s, n, port=i)
+    g.connect(pred, n, port=PRED_PORT)
+    return n
+
+
+def build_thresh_conv(copy: int, g: DFG, width: int):
+    """Thresholded 3x3 conv: pixels above threshold are steered through and
+    accumulated (predicated store); below-threshold pixels contribute 0 and
+    hold the accumulator."""
+    src = g.add(INPUT, name=f"in{copy}")
+    taps = _window3x3(g, src, width, f"tc{copy}")
+    conv = _conv3x3(g, taps, G3, shift=4)
+    above = _pe(g, "ge", conv, _const(g, 48))
+    kept = _pred_pe(g, "steer", conv, pred=above)
+    acc = g.add(MEM, name=f"tc{copy}_acc", op="accum", latency=1)
+    g.connect(kept, acc, 0)
+    g.connect(above, acc, port=PRED_PORT)
+    o = g.add(OUTPUT, name=f"out{copy}")
+    g.connect(kept, o)
+    o2 = g.add(OUTPUT, name=f"energy{copy}")
+    g.connect(acc, o2)
+
+
+def build_clip_pipe(copy: int, g: DFG, width: int):
+    """Data-dependent clip/saturate: an unsharp-style sharpened stream is
+    clamped by comparator-driven ``sel`` merges instead of min/max — the
+    canonical if/else diamond, fully predicated."""
+    src = g.add(INPUT, name=f"in{copy}")
+    taps = _window3x3(g, src, width, f"cl{copy}")
+    blur = _conv3x3(g, taps, G3, shift=4)
+    center = taps[1][1]
+    detail = _pe(g, "sub", center, blur)
+    amp = _pe(g, "mul", detail, _const(g, 3))
+    sharp = _pe(g, "add", center, amp)
+    hi, lo = _const(g, 240), _const(g, 16)
+    # wrapped subtraction can leave "negative" (huge) values: saturate high
+    # only in the plausible range, then low
+    over = _pe(g, "gt", sharp, hi)
+    capped = _pred_pe(g, "sel", hi, sharp, pred=over)
+    under = _pe(g, "lt", capped, lo)
+    clipped = _pred_pe(g, "sel", lo, capped, pred=under)
+    o = g.add(OUTPUT, name=f"out{copy}")
+    g.connect(clipped, o)
+
+
+def build_refine(copy: int, g: DFG, width: int):
+    """Bounded while-style iterative refinement, unrolled with exit
+    predicates: each unrolled iteration nudges the estimate toward
+    ``x / 3`` and a ``phi`` merge holds the value once the per-lane exit
+    condition (|error| <= tol) fires — the loop body executes, the lane
+    just stops updating, exactly how a CGRA predicates a data-dependent
+    ``while`` with a static iteration bound."""
+    src = g.add(INPUT, name=f"in{copy}")
+    tol = _const(g, 2)
+    y = _pe(g, "shr", src, _const(g, 2))          # initial estimate x/4
+    done = None
+    for _ in range(4):
+        three_y = _pe(g, "add", y, _pe(g, "shl", y, _const(g, 1)))
+        err = _pe(g, "sub", src, three_y)         # wrapped signed error
+        mag = _pe(g, "abs", err)
+        done = _pe(g, "le", mag, tol)             # exit predicate
+        delta = _pe(g, "max", _pe(g, "shr", mag, _const(g, 2)),
+                    _const(g, 1))
+        too_big = _pe(g, "gt", three_y, src)
+        moved = _pred_pe(g, "sel",
+                         _pe(g, "sub", y, delta),
+                         _pe(g, "add", y, delta), pred=too_big)
+        y = _pred_pe(g, "phi", y, moved, pred=done)
+    o = g.add(OUTPUT, name=f"out{copy}")
+    g.connect(y, o)
+    o2 = g.add(OUTPUT, name=f"done{copy}")
+    g.connect(done, o2)
+
+
+# ---------------------------------------------------------------------------
 # sparse app builders (SAM-style, ready-valid)
 # ---------------------------------------------------------------------------
 
@@ -380,4 +467,16 @@ SPARSE_APPS: Dict[str, AppSpec] = {
     "ttv": AppSpec("ttv", build_ttv, sparse=True, work_tokens=2600),
 }
 
-ALL_APPS = {**DENSE_APPS, **SPARSE_APPS}
+#: Predicated control-flow workloads (PR 10).  Kept out of ``DENSE_APPS``
+#: so the paper-table benchmarks and their pinned bands are untouched;
+#: compiled/simulated by ``tests/test_predication.py`` and
+#: ``benchmarks/control_flow.py`` (alongside straight-line baselines).
+CONTROL_APPS: Dict[str, AppSpec] = {
+    "thresh_conv": AppSpec("thresh_conv", build_thresh_conv,
+                           frame=(1536, 2560), unroll=4),
+    "clip_pipe": AppSpec("clip_pipe", build_clip_pipe,
+                         frame=(1536, 2560), unroll=4),
+    "refine": AppSpec("refine", build_refine, frame=(512, 512), unroll=2),
+}
+
+ALL_APPS = {**DENSE_APPS, **SPARSE_APPS, **CONTROL_APPS}

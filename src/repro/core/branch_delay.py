@@ -16,13 +16,23 @@ Two views are supported:
                    switch-box sites along routes).
 
 Edges driven by CONST nodes are time-invariant and never need matching.
+
+Predicated regions (PR 10) need no special casing here by construction:
+predicate edges live in the ``[PRED_PORT, CONTROL_PORT)`` band, *below*
+the control cutoff, so they are ordinary data to the matcher — both arms
+of a predicated region **and** the predicate itself are register-balanced
+before the merge point (``phi``/``sel`` PE or predicated MEM accumulator)
+exactly like any multi-input operand set.  Only the ``>= CONTROL_PORT``
+side-band (flush) is skipped.  :func:`check_predicated_regions` verifies
+that invariant per merge point with a targeted diagnostic.
 """
 
 from __future__ import annotations
 
 from typing import Dict, List, Optional, Set, Tuple
 
-from .dfg import CONST, CONTROL_PORT, DFG, FIFO, INPUT, REG
+from .dfg import (CONST, CONTROL_PORT, DFG, FIFO, INPUT, MEM, PE, PRED_OPS,
+                  PRED_PORT, REG)
 from .netlist import Branch, Netlist
 
 
@@ -86,6 +96,42 @@ def check_matched_dfg(g: DFG) -> bool:
         if len(arrivals) > 1:
             return False
     return True
+
+
+def predicated_merge_nodes(g: DFG) -> List[str]:
+    """Nodes where predicated control flow reconverges: ``phi``/``sel``
+    merge PEs and MEM accumulators with a predicate edge."""
+    out = []
+    for name, node in g.nodes.items():
+        if node.kind == PE and node.op in PRED_OPS:
+            out.append(name)
+        elif node.kind == MEM and node.op == "accum" and any(
+                PRED_PORT <= e.port < CONTROL_PORT
+                for e in g.in_edges(name)):
+            out.append(name)
+    return out
+
+
+def check_predicated_regions(g: DFG) -> List[str]:
+    """Per-merge-point delay-matching diagnostics for predicated regions.
+
+    Returns one message per merge node (``phi``/``sel``/``steer`` PE or
+    predicated accumulator) whose arms or predicate arrive on different
+    cycles — empty list means every predicated region is balanced.  This
+    is :func:`check_matched_dfg` restricted to the reconvergence points,
+    with the offending arm named so a matching bug points at the edge.
+    """
+    arr = arrival_cycles_dfg(g)
+    problems = []
+    for name in predicated_merge_nodes(g):
+        edges = _data_in_edges(g, name)
+        arrivals = {arr[e.src] for e in edges}
+        if len(arrivals) > 1:
+            detail = ", ".join(
+                f"{'pred' if e.port >= PRED_PORT else f'arm p{e.port}'}"
+                f"<-{e.src}@{arr[e.src]}" for e in edges)
+            problems.append(f"{g.name}: merge {name} unbalanced: {detail}")
+    return problems
 
 
 def match_netlist(nl: Netlist) -> int:

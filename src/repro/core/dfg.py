@@ -17,6 +17,26 @@ CONST            a compile-time constant
 
 Edges carry a bit ``width`` (16 for data, 1 for control/valid) and land on a
 named ``port`` of the destination so non-commutative ops simulate correctly.
+
+Port bands
+----------
+The destination ``port`` number selects one of three bands, each with its
+own contract:
+
+``data``       ports ``< PRED_PORT`` (0..79).  Ordinary 16-bit operands;
+               counted against the op's arity, simulated positionally,
+               register-balanced by branch-delay matching.
+``predicate``  ports in ``[PRED_PORT, CONTROL_PORT)`` (80..89).  A single
+               1-bit predicate that gates the consuming node (``steer`` /
+               ``sel`` / ``phi`` PEs, predicated MEM accumulators).
+               Predicate edges are real dataflow: they are routed, timed
+               and delay-matched exactly like data — the simulator just
+               resolves them separately from the positional operands.
+``control``    ports ``>= CONTROL_PORT`` (90+).  Side-band control such as
+               the global flush broadcast: routed and timed like any net
+               but carrying no dataflow — the functional simulator and
+               branch-delay matching skip them.  ``DFG.validate()``
+               rejects data (width > 1) edges landing in this band.
 """
 
 from __future__ import annotations
@@ -40,6 +60,13 @@ KINDS = {INPUT, OUTPUT, PE, MEM, REG, RF, FIFO, CONST}
 # no dataflow — the functional simulator and branch-delay matching skip them.
 CONTROL_PORT = 90
 
+# edges landing on ports in [PRED_PORT, CONTROL_PORT) carry the consuming
+# node's 1-bit predicate.  Unlike the control side-band they ARE dataflow —
+# routed, timed and branch-delay-matched like any operand — but the
+# simulators resolve them separately from the positional data arguments
+# (see the module docstring's port-band table).
+PRED_PORT = 80
+
 # kinds that terminate / originate combinational timing paths (sequential).
 SEQUENTIAL_KINDS = {REG, RF, FIFO, INPUT, OUTPUT, MEM}
 
@@ -59,11 +86,32 @@ PE_OPS: Dict[str, Callable[..., int]] = {
     "gt": lambda a, b: int(a > b),
     "lt": lambda a, b: int(a < b),
     "eq": lambda a, b: int(a == b),
+    "ne": lambda a, b: int(a != b),
+    "ge": lambda a, b: int(a >= b),
+    "le": lambda a, b: int(a <= b),
     "mux": lambda s, a, b: a if (s & 1) else b,
     "pass": lambda a: a,
+    # predicated ops: the predicate (1-bit, from the PRED_PORT band) is the
+    # last positional argument after the data operands.
+    "steer": lambda a, p: a if (p & 1) else 0,
+    "sel": lambda a, b, p: a if (p & 1) else b,
+    "phi": lambda a, b, p: a if (p & 1) else b,
 }
 
-PE_ARITY = {"abs": 1, "pass": 1, "mux": 3}
+# data-operand arity: in-edges on ports < PRED_PORT (predicate edges are
+# counted separately — see PRED_OPS / validate()).
+PE_ARITY = {"abs": 1, "pass": 1, "mux": 3, "steer": 1, "sel": 2, "phi": 2}
+
+# PE ops that take (and require) exactly one predicate edge.  ``sel``
+# chooses between two live values (partial predication); ``phi`` is the
+# same hardware op but marks a control-flow merge point where exactly one
+# arm is semantically live — branch-delay matching balances both arms plus
+# the predicate before the merge.  ``steer`` gates a single value to 0.
+PRED_OPS = frozenset({"steer", "sel", "phi"})
+
+#: comparator ops — 1-bit producers over the unsigned 16-bit domain,
+#: natural predicate drivers.
+CMP_OPS = frozenset({"gt", "lt", "eq", "ne", "ge", "le"})
 
 
 @dataclass
@@ -147,7 +195,11 @@ class DFG:
     def connect(self, src: str, dst: str, port: int = 0, width: Optional[int] = None):
         if src not in self.nodes or dst not in self.nodes:
             raise KeyError(f"edge {src}->{dst} references unknown node")
-        w = self.nodes[src].width if width is None else width
+        if width is None:
+            # predicate/control side-bands are 1-bit by contract
+            w = 1 if port >= PRED_PORT else self.nodes[src].width
+        else:
+            w = width
         self.edges.append(Edge(src, dst, port, w))
 
     # -- queries -------------------------------------------------------------
@@ -188,15 +240,44 @@ class DFG:
 
     def validate(self):
         self.topo_order()
+        for e in self.edges:
+            if e.port >= CONTROL_PORT and e.width > 1:
+                raise ValueError(
+                    f"{self.name}: edge {e.src}->{e.dst} lands a "
+                    f"width-{e.width} data edge on control port {e.port} "
+                    f"(ports >= {CONTROL_PORT} are the 1-bit side-band)")
+            if PRED_PORT <= e.port < CONTROL_PORT and e.width != 1:
+                raise ValueError(
+                    f"{self.name}: predicate edge {e.src}->{e.dst} on port "
+                    f"{e.port} must be 1 bit wide, got {e.width}")
         for n in self.nodes.values():
+            preds = [e for e in self.in_edges(n.name)
+                     if PRED_PORT <= e.port < CONTROL_PORT]
+            if len(preds) > 1:
+                raise ValueError(
+                    f"{self.name}: {n.name} has {len(preds)} predicate "
+                    f"edges; at most one is allowed")
+            if preds and not (
+                    (n.kind == PE and n.op in PRED_OPS)
+                    or (n.kind == MEM and n.op == "accum")):
+                raise ValueError(
+                    f"{self.name}: {n.kind} {n.name} (op={n.op!r}) cannot "
+                    f"take a predicate edge; only "
+                    f"{'/'.join(sorted(PRED_OPS))} PEs and MEM "
+                    f"accumulators are predicated")
             if n.kind == PE and n.op:
                 arity = PE_ARITY.get(n.op, 2)
                 got = len([e for e in self.in_edges(n.name)
-                           if e.port < CONTROL_PORT])
+                           if e.port < PRED_PORT])
                 if got != arity:
                     raise ValueError(
                         f"{self.name}: PE {n.name} op={n.op} wants {arity} "
                         f"inputs, has {got}")
+                if n.op in PRED_OPS and not preds:
+                    raise ValueError(
+                        f"{self.name}: PE {n.name} op={n.op} requires a "
+                        f"predicate edge on a port in "
+                        f"[{PRED_PORT}, {CONTROL_PORT})")
         return self
 
     # -- surgery (used by the pipelining passes) ------------------------------

@@ -29,7 +29,7 @@ from dataclasses import dataclass
 from typing import List
 
 from .apps import AppSpec
-from .dfg import CONST, DFG, FIFO, INPUT, MEM, OUTPUT, PE, RF
+from .dfg import CONST, DFG, FIFO, INPUT, MEM, OUTPUT, PE, PRED_PORT, RF
 
 
 def _const(g: DFG, v: int) -> str:
@@ -112,9 +112,16 @@ def _ssm_tile(copy: int, g: DFG, lanes: int):
     g.connect(y, o)
 
 
-def _moe_tile(copy: int, g: DFG, experts: int, taps: int):
+def _moe_tile(copy: int, g: DFG, experts: int, taps: int,
+              predicated: bool = False):
     """Sparse (ready-valid) MoE tile: top-1 argmax router over `experts`
-    scores, mux-selected expert weight row, FFN MAC lane behind FIFOs."""
+    scores, mux-selected expert weight row, FFN MAC lane behind FIFOs.
+
+    ``predicated=True`` routes the argmax through ``sel`` merges with the
+    comparator on a ``PRED_PORT``-band predicate edge instead of mux data
+    ports — same function, exercising the predicated IR path (PR 10).
+    Off by default so existing lm app fingerprints are unchanged.
+    """
     x = [g.add(INPUT, name=f"x{copy}_{i}") for i in range(taps)]
     scores = [g.add(INPUT, name=f"s{copy}_{e}") for e in range(experts)]
     wrows = [g.add(INPUT, name=f"wr{copy}_{e}") for e in range(experts)]
@@ -124,13 +131,22 @@ def _moe_tile(copy: int, g: DFG, experts: int, taps: int):
         g.connect(src, f)
         return f
 
-    # argmax tree: carry (best_score, best_row) pairs through cmp+mux
+    def pick(cond, a, b):
+        if not predicated:
+            return _pe(g, "mux", cond, a, b)
+        n = g.add(PE, op="sel")
+        g.connect(a, n, port=0)
+        g.connect(b, n, port=1)
+        g.connect(cond, n, port=PRED_PORT)
+        return n
+
+    # argmax tree: carry (best_score, best_row) pairs through cmp+sel/mux
     best_s, best_w = fifo(scores[0]), fifo(wrows[0])
     for e in range(1, experts):
         se, we = fifo(scores[e]), fifo(wrows[e])
         gt = _pe(g, "gt", se, best_s)
-        best_s = _pe(g, "mux", gt, se, best_s)
-        best_w = _pe(g, "mux", gt, we, best_w)
+        best_s = pick(gt, se, best_s)
+        best_w = pick(gt, we, best_w)
     # expert FFN MAC lane: sum_i x_i * w (row broadcast), relu
     prods = [_pe(g, "mul", fifo(x[i]), best_w) for i in range(taps)]
     acc = _pe(g, "shr", _tree(g, "add", prods), _const(g, 4))
@@ -153,6 +169,7 @@ class _BlockTileBuilder:
     family: str
     taps: int
     experts: int = 0
+    predicated: bool = False
 
     def __call__(self, copy: int, g: DFG, width: int) -> None:
         if self.family in ("ssm", "hybrid"):
@@ -160,21 +177,27 @@ class _BlockTileBuilder:
             # the 64-IO-tile Amber fabric
             _ssm_tile(copy, g, max(2, self.taps // 2))
         elif self.family == "moe":
-            _moe_tile(copy, g, experts=self.experts, taps=self.taps)
+            _moe_tile(copy, g, experts=self.experts, taps=self.taps,
+                      predicated=self.predicated)
         else:
             _attention_tile(copy, g, self.taps)
 
 
-def lower_block(cfg, taps: int = 8, unroll: int = 2) -> AppSpec:
+def lower_block(cfg, taps: int = 8, unroll: int = 2,
+                predicated: bool = False) -> AppSpec:
     """AppSpec for one tile of `cfg`'s block compute on the Amber CGRA.
 
     tokens-per-frame is scaled so runtimes are comparable across archs:
     one "frame" = 4096 tokens x (d_model / taps) lanes of work per copy.
+    ``predicated`` switches the MoE router's argmax to ``sel`` merges on
+    predicate edges (off by default — fingerprints unchanged).
     """
     fam = cfg.family
     work = (4096, max(1, cfg.d_model // taps))
     if fam == "moe":
-        build = _BlockTileBuilder(fam, taps, experts=min(8, cfg.num_experts))
+        build = _BlockTileBuilder(fam, taps,
+                                  experts=min(8, cfg.num_experts),
+                                  predicated=predicated)
         return AppSpec(f"lm_{cfg.name}", build, sparse=True,
                        work_tokens=work[0] * work[1] // 64)
     return AppSpec(f"lm_{cfg.name}", _BlockTileBuilder(fam, taps),

@@ -19,7 +19,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Set, Tuple
 
-from .dfg import CONST, DFG, FIFO, INPUT, MEM, OUTPUT, PE, REG, RF, Node
+from .dfg import (CONST, CONTROL_PORT, DFG, FIFO, INPUT, MEM, OUTPUT,
+                  PE, REG, RF, Node)
 from .interconnect import Fabric, Hop, Tile
 
 PLACEABLE = {PE, MEM, RF, FIFO, INPUT, OUTPUT}
@@ -150,7 +151,7 @@ def extract_netlist(g: DFG) -> Netlist:
             if g.nodes[src].kind not in PLACEABLE:
                 raise ValueError(f"branch into {name} reaches non-placeable {src}")
             branches.append(Branch(src, name, e.port, e.width, n_regs, n_regs,
-                                   control=e.port >= 90))
+                                   control=e.port >= CONTROL_PORT))
     return Netlist(nodes=nodes, branches=branches, consts=consts,
                    const_nodes=const_nodes, sparse=g.sparse, name=g.name)
 

@@ -33,9 +33,9 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from .apps import AppSpec
-from .branch_delay import check_matched_netlist
+from .branch_delay import check_matched_netlist, check_predicated_regions
 from .broadcast import broadcast_pipelining
-from .dfg import DFG
+from .dfg import CONTROL_PORT, DFG, PRED_PORT
 from .explore import ExploreSpec, ParetoFrontier, PointMap, explore_frontier
 from .flush import add_soft_flush
 from .interconnect import Fabric, Region, SubFabric
@@ -698,11 +698,20 @@ def _pareto_frontier(ctx: CompileContext):
 
 @register_pass("match_check", gate=lambda ctx: not ctx.app.sparse)
 def _match_check(ctx: CompileContext):
-    """Invariant: branch delays must stay matched through the whole flow."""
+    """Invariant: branch delays must stay matched through the whole flow.
+    For predicated graphs, additionally pins the per-merge-point view:
+    both arms and the predicate of every predicated region must arrive on
+    the same cycle (a targeted diagnostic for the PRED_PORT band)."""
     ctx.require(netlist=ctx.netlist)
     if not check_matched_netlist(ctx.netlist):
         raise AssertionError(
             f"{ctx.app.name}: branch delays unmatched after flow")
+    if any(PRED_PORT <= b.port < CONTROL_PORT for b in ctx.netlist.branches):
+        problems = check_predicated_regions(ctx.netlist.to_dfg())
+        if problems:
+            raise AssertionError(
+                f"{ctx.app.name}: predicated regions unbalanced after "
+                f"flow: " + "; ".join(problems))
 
 
 @register_pass("region_fence_check", stats_key="region_fence",

@@ -20,6 +20,14 @@ bit-identical to the interpreter over the 16-bit value domain — see that
 module and :func:`repro.core.config.sim_backend` for the
 ``CASCADE_SIM_BACKEND`` seam (mirrors ``pnr_backend`` from PR 6: drivers
 read the env var, library code only ever takes the explicit argument).
+
+The interpreter is also the *oracle for predicated execution*: edges in
+the ``[PRED_PORT, CONTROL_PORT)`` band resolve to the consuming node's
+1-bit predicate (the last positional argument of ``steer``/``sel``/``phi``
+PEs); a MEM accumulator with a false predicate holds its state — in the
+sparse simulator it still consumes its input tokens and emits the held
+value (value-gating), so the Kahn network's firing schedule is
+predicate-independent and all three backends agree on deadlock markings.
 """
 
 from __future__ import annotations
@@ -28,12 +36,18 @@ import threading
 from collections import OrderedDict, deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .dfg import CONST, CONTROL_PORT, DFG, FIFO, INPUT, MEM, OUTPUT, PE, PE_OPS, REG, RF
+from .dfg import (CONST, CONTROL_PORT, DFG, FIFO, INPUT, MEM, OUTPUT, PE,
+                  PE_OPS, PRED_OPS, PRED_PORT, REG, RF)
 
 
-def _eval_node(node, args: List[int]) -> int:
+def _eval_node(node, args: List[int], pred: Optional[int] = None) -> int:
     if node.kind == PE:
         fn = PE_OPS[node.op]
+        if node.op in PRED_OPS:
+            # predicate is the last positional argument; a node with no
+            # predicate edge (validate() rejects, but partial graphs occur
+            # in tests) behaves as if enabled.
+            return fn(*args, 1 if pred is None else pred)
         return fn(*args)
     if node.kind == MEM:
         if node.op == "rom":
@@ -49,6 +63,21 @@ def _eval_node(node, args: List[int]) -> int:
     if node.kind == OUTPUT:
         return args[0] if args else 0
     raise ValueError(f"cannot evaluate node kind {node.kind}")
+
+
+def _split_args(edges, value: Dict[str, int]):
+    """Split a node's in-band values into positional data args and the
+    (optional) predicate.  ``edges`` is the port-sorted ``< CONTROL_PORT``
+    edge list, so data operands stay positional and the predicate — if any
+    — is the single edge in the ``[PRED_PORT, CONTROL_PORT)`` band."""
+    args: List[int] = []
+    pred: Optional[int] = None
+    for e in edges:
+        if e.port >= PRED_PORT:
+            pred = value[e.src]
+        else:
+            args.append(value[e.src])
+    return args, pred
 
 
 def _dispatch_backend(backend: Optional[str]) -> str:
@@ -114,19 +143,21 @@ def _simulate_interp(g: DFG, inputs: Dict[str, Sequence[int]],
             node = g.nodes[name]
             if node.kind in (INPUT, CONST) or name in queues or name in accum:
                 continue
-            args = [value[e.src] for e in in_edges[name]]
-            value[name] = _eval_node(node, args)
+            args, pred = _split_args(in_edges[name], value)
+            value[name] = _eval_node(node, args, pred)
         # sample phase: sequential nodes capture this cycle's inputs.
         for name in accum:
-            args = [value[e.src] for e in in_edges[name]]
-            accum[name] = (accum[name] + (args[0] if args else 0)) & 0xFFFF
+            args, pred = _split_args(in_edges[name], value)
+            # predicated store: a false predicate holds the accumulator
+            if pred is None or (pred & 1):
+                accum[name] = (accum[name] + (args[0] if args else 0)) & 0xFFFF
         for name, q in queues.items():
             if name in accum:
                 continue
             node = g.nodes[name]
-            args = [value[e.src] for e in in_edges[name]]
+            args, pred = _split_args(in_edges[name], value)
             q.popleft()
-            q.append(_eval_node(node, args))
+            q.append(_eval_node(node, args, pred))
         for name in outputs:
             outputs[name].append(value[name])
     return outputs
@@ -363,12 +394,23 @@ def _simulate_sparse_interp(g: DFG, inputs: Dict[str, Sequence[int]],
                 continue
             if any(len(bufs[(e.dst, e.port)]) >= cap[e.dst] for e in outs):
                 continue
-            args = [p[0] for p in ports]
+            args, pred = [], None
+            for e, p in zip(in_edges[name], ports):
+                if e.port >= PRED_PORT:
+                    pred = p[0]
+                else:
+                    args.append(p[0])
             if node.kind == MEM and node.op == "accum":
-                v = (accum_state.get(name, 0) + args[0]) & 0xFFFF
-                accum_state[name] = v
+                # value-gating: a false predicate still consumes the input
+                # tokens and emits the (held) accumulator value, keeping
+                # the Kahn network's firing schedule predicate-independent
+                if pred is None or (pred & 1):
+                    v = (accum_state.get(name, 0) + args[0]) & 0xFFFF
+                    accum_state[name] = v
+                else:
+                    v = accum_state.get(name, 0)
             else:
-                v = _eval_node(node, args)
+                v = _eval_node(node, args, pred)
             for p in ports:
                 p.popleft()
             for e in outs:

@@ -58,16 +58,22 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .dfg import CONST, CONTROL_PORT, DFG, FIFO, INPUT, MEM, OUTPUT, PE, PE_OPS
+from .dfg import (CONST, CONTROL_PORT, DFG, FIFO, INPUT, MEM, OUTPUT, PE,
+                  PE_ARITY, PE_OPS, PRED_OPS, PRED_PORT)
 
 MASK = 0xFFFF
 
-#: Vectorized opcode space.  The first 16 mirror ``PE_OPS`` order-free;
+#: Vectorized opcode space.  The named PE ops mirror ``PE_OPS`` order-free
+#: (predicated ops gather their predicate as the last argument — the
+#: port-sorted edge lists put the ``PRED_PORT`` band after the data
+#: operands, so the gather order matches the ``PE_OPS`` lambda signature);
 #: ``pass`` also covers REG/RF/FIFO/OUTPUT/MEM-delay forwarding, ``zero``
 #: covers unconnected forwards and empty-table ROMs, ``rom`` is the
-#: table-lookup MEM and ``acc`` the sparse accumulator.
+#: table-lookup MEM, ``acc`` the sparse accumulator and ``accp`` its
+#: predicated (hold-on-false) variant.
 _OPS = ("zero", "pass", "add", "sub", "mul", "and", "or", "xor", "shr",
-        "shl", "min", "max", "abs", "gt", "lt", "eq", "mux", "rom", "acc")
+        "shl", "min", "max", "abs", "gt", "lt", "eq", "ne", "ge", "le",
+        "mux", "sel", "phi", "steer", "rom", "acc", "accp")
 _OPC = {name: i for i, name in enumerate(_OPS)}
 
 
@@ -117,8 +123,18 @@ def _op_table(xp, romgather):
         _OPC["gt"]: lambda a0, a1, a2, g: cast(a0 > a1, a0),
         _OPC["lt"]: lambda a0, a1, a2, g: cast(a0 < a1, a0),
         _OPC["eq"]: lambda a0, a1, a2, g: cast(a0 == a1, a0),
+        _OPC["ne"]: lambda a0, a1, a2, g: cast(a0 != a1, a0),
+        _OPC["ge"]: lambda a0, a1, a2, g: cast(a0 >= a1, a0),
+        _OPC["le"]: lambda a0, a1, a2, g: cast(a0 <= a1, a0),
         _OPC["mux"]: lambda a0, a1, a2, g: xp.where(
             cast(a0 & 1, a0) != 0, a1, a2),
+        # predicated ops: the predicate arrives as the last gathered arg
+        _OPC["sel"]: lambda a0, a1, a2, g: xp.where(
+            cast(a2 & 1, a0) != 0, a0, a1),
+        _OPC["phi"]: lambda a0, a1, a2, g: xp.where(
+            cast(a2 & 1, a0) != 0, a0, a1),
+        _OPC["steer"]: lambda a0, a1, a2, g: xp.where(
+            cast(a1 & 1, a0) != 0, a0, xp.zeros_like(a0)),
         _OPC["rom"]: romgather,
     }
 
@@ -157,6 +173,8 @@ class DenseProgram:
     const_vals: np.ndarray
     accum_pos: np.ndarray          # (n_accum,) value slots
     accum_src: np.ndarray          # (n_accum,) arg gather index (pad ok)
+    accum_pred: np.ndarray         # (n_accum,) predicate gather index (pad ok)
+    accum_pmask: np.ndarray        # (n_accum,) bool: True = predicated
     seq_pos: np.ndarray            # (n_seq,) value slots of latency nodes
     seq_lat: np.ndarray            # (n_seq,) cycle latencies (>= 1)
     comb_groups: List[_Group] = field(default_factory=list)   # level-ordered
@@ -189,6 +207,14 @@ def _eval_spec(g: DFG, node, args: List[int], pad: int,
         if node.op not in PE_OPS or node.op not in _OPC:
             raise SimLoweringError(
                 f"{g.name}: PE op {node.op!r} has no vectorized lowering")
+        if node.op in PRED_OPS and len(args) != PE_ARITY[node.op] + 1:
+            # the interpreter tolerates a missing predicate (acts enabled);
+            # the vectorized gather would read the 0-pad slot and disable
+            # the op, so refuse to lower rather than silently diverge
+            raise SimLoweringError(
+                f"{g.name}: predicated PE {node.name} op={node.op} needs "
+                f"its predicate edge for vectorized lowering "
+                f"(got {len(args)} in-band inputs)")
         return _OPC[node.op], a, -1
     if node.kind == MEM and node.op == "rom":
         table = node.meta.get("table", [])
@@ -315,10 +341,13 @@ def lower_dense(g: DFG) -> DenseProgram:
         tab_len[i] = len(t)
 
     outputs = [name for name in order if g.nodes[name].kind == OUTPUT]
-    accum_src = []
+    accum_src, accum_pred, accum_pmask = [], [], []
     for name in accums:
-        ie = in_edges[name]
-        accum_src.append(slot[ie[0].src] if ie else pad)
+        data = [e for e in in_edges[name] if e.port < PRED_PORT]
+        pe_ = [e for e in in_edges[name] if e.port >= PRED_PORT]
+        accum_src.append(slot[data[0].src] if data else pad)
+        accum_pred.append(slot[pe_[0].src] if pe_ else pad)
+        accum_pmask.append(bool(pe_))
 
     return DenseProgram(
         name=g.name, n_nodes=n, order=order,
@@ -330,6 +359,8 @@ def lower_dense(g: DFG) -> DenseProgram:
                             dtype=np.int64),
         accum_pos=np.array([slot[a] for a in accums], dtype=np.int64),
         accum_src=np.array(accum_src, dtype=np.int64),
+        accum_pred=np.array(accum_pred, dtype=np.int64),
+        accum_pmask=np.array(accum_pmask, dtype=bool),
         seq_pos=np.array([slot[s] for s in seq_ordered], dtype=np.int64),
         seq_lat=np.array([g.nodes[s].cycle_latency() for s in seq_ordered],
                          dtype=np.int64),
@@ -384,9 +415,12 @@ def _dense_numpy(prog: DenseProgram, in_mat: np.ndarray,
             a = val[grp.args]
             val[grp.out] = ops[grp.op](a[:, 0], a[:, 1], a[:, 2], grp)
         out_mat[:, t] = val[prog.output_pos]
-        # sample phase
+        # sample phase (a false predicate holds the accumulator)
         if n_acc:
-            accum[:n_acc] = (accum[:n_acc] + val[prog.accum_src]) & MASK
+            en = (~prog.accum_pmask) | ((val[prog.accum_pred] & 1) == 1)
+            accum[:n_acc] = np.where(
+                en, (accum[:n_acc] + val[prog.accum_src]) & MASK,
+                accum[:n_acc])
         if n_seq:
             newv = np.zeros(n_seq, dtype=np.int64)
             for grp in prog.seq_groups:
@@ -428,8 +462,8 @@ def _jitted_dense(sig: tuple, cycles: int):
         comb_starts.append(start)
         start += size
 
-    def run(base, xs, comb, seqg, seq_lat, accum_src, out_pos,
-            table_mat, tab_len):
+    def run(base, xs, comb, seqg, seq_lat, accum_src, accum_pred,
+            accum_pmask, out_pos, table_mat, tab_len):
         def romgather(a0, rows):
             return table_mat[rows, a0 % tab_len[rows]]
 
@@ -459,7 +493,9 @@ def _jitted_dense(sig: tuple, cycles: int):
                     group_result(op, args_mat, rom_rows, val))
             outs = val[out_pos]
             if n_acc:
-                accum = (accum + val[accum_src]) & MASK
+                en = (~accum_pmask) | ((val[accum_pred] & 1) == 1)
+                accum = jnp.where(en, (accum + val[accum_src]) & MASK,
+                                  accum)
             if n_seq:
                 parts = [group_result(op, args_mat, rom_rows, val)
                          for (op, _), (args_mat, rom_rows) in zip(seq_sig,
@@ -495,6 +531,7 @@ def _dense_jax(prog: DenseProgram, in_mat: np.ndarray,
     xs = jnp.asarray(in_mat.T.astype(np.uint32))
     ys = run(jnp.asarray(base), xs, comb, seqg,
              jnp.asarray(prog.seq_lat), jnp.asarray(prog.accum_src),
+             jnp.asarray(prog.accum_pred), jnp.asarray(prog.accum_pmask),
              jnp.asarray(prog.output_pos),
              jnp.asarray(prog.table_mat.astype(np.uint32)),
              jnp.asarray(prog.tab_len))
@@ -616,7 +653,10 @@ def lower_sparse(g: DFG) -> SparseProgram:
             ins = [buf_id[(n, e.port)] for e in data_in[n]]
             outs = [buf_id[(e.dst, e.port)] for e in data_out[n]]
             if nd.kind == MEM and nd.op == "accum":
-                op, rom = _OPC["acc"], -1
+                # predicated accumulators (a PRED_PORT-band in-edge) hold
+                # state on a false predicate but still consume/emit tokens
+                has_pred = any(e.port >= PRED_PORT for e in data_in[n])
+                op, rom = _OPC["accp" if has_pred else "acc"], -1
             else:
                 op, _, rom = _eval_spec(g, nd, list(range(len(ins))), 0,
                                         rom_tables)
@@ -629,7 +669,7 @@ def lower_sparse(g: DFG) -> SparseProgram:
     ev_rom = np.array([max(r[1], 0) for r in ev_rows] or [0], dtype=np.int64)
     acc_slot, acc_ev, n_acc = [], [], 0
     for i, r in enumerate(ev_rows):
-        if r[0] == _OPC["acc"]:
+        if r[0] in (_OPC["acc"], _OPC["accp"]):
             acc_slot.append(n_acc)
             acc_ev.append(i)
             n_acc += 1
@@ -780,6 +820,10 @@ def _sparse_numpy(g: DFG, prog: SparseProgram,
             sel = prog.ev_op[:n_ev] == op
             if op == _OPC["acc"]:
                 v[sel] = (accum[prog.ev_acc[sel]] + a0[sel]) & MASK
+            elif op == _OPC["accp"]:
+                held = accum[prog.ev_acc[sel]]
+                v[sel] = np.where((a1[sel] & 1) == 1,
+                                  (held + a0[sel]) & MASK, held)
             elif op == _OPC["rom"]:
                 v[sel] = romgather(a0[sel], None, None, prog.ev_rom[sel])
             else:
@@ -872,6 +916,10 @@ def _jitted_sparse(sig: tuple, max_cycles: int):
                 sel = ev_op == op
                 if op == _OPC["acc"]:
                     res = (accum[jnp.maximum(ev_acc, 0)] + a0) & MASK
+                elif op == _OPC["accp"]:
+                    held = accum[jnp.maximum(ev_acc, 0)]
+                    res = jnp.where((a1 & 1) == 1, (held + a0) & MASK,
+                                    held)
                 elif op == _OPC["rom"]:
                     res = table_mat[ev_rom, a0 % tab_len[ev_rom]]
                 else:

@@ -147,7 +147,8 @@ def analyze(design: RoutedDesign, tm: TimingModel,
 
     for name in order:
         node = nl.nodes[name]
-        core = tm.core_delay("io" if node.kind in (INPUT, OUTPUT) else node.kind)
+        core = tm.core_delay("io" if node.kind in (INPUT, OUTPUT)
+                             else node.kind, node.op)
         core *= sample(("core", name))
         if _seq_output(node):
             a_out = tm.reg_clk_q + core
@@ -254,7 +255,8 @@ def timing_matrix(design: RoutedDesign, tm: TimingModel) -> Tuple[np.ndarray, Li
     vindex: Dict[str, int] = {}
     edges: List[Tuple[int, int, float]] = []
     for name, node in nl.nodes.items():
-        core = tm.core_delay("io" if node.kind in (INPUT, OUTPUT) else node.kind)
+        core = tm.core_delay("io" if node.kind in (INPUT, OUTPUT)
+                             else node.kind, node.op)
         iv, ov = vid(("in", name)), vid(("out", name))
         if _seq_output(node):
             edges.append((vid("SRC"), ov, tm.reg_clk_q + core))

@@ -412,7 +412,7 @@ def lower_design(design: RoutedDesign, tm: TimingModel) -> LoweredSTA:
                 site=(base + len(rb.hops) - 1) if rb.hops else -1,
                 delay=tm.cb_in, level=vlevel[prev] + 1)
         core = tm.core_delay("io" if node.kind in (INPUT, OUTPUT)
-                             else node.kind)
+                             else node.kind, node.op)
         core_of[name] = core
         seq_out[name] = _seq_output(node)
         if seq_out[name]:

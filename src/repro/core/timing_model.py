@@ -43,6 +43,20 @@ TECH_NS = {
 }
 
 
+#: Delay class for every PE op: which ``TECH_NS`` core entry times it.
+#: The paper's tile STA reports one worst-case core path per tile type, so
+#: every op — ALU, comparator, mux/sel/phi/steer — shares the ``core_pe``
+#: figure today; the mapping exists so per-op classes can diverge later
+#: and so the audit test can assert every ``PE_OPS`` entry is timed.
+PE_OP_DELAY_CLASS: Dict[str, str] = {
+    op: "core_pe" for op in (
+        "add", "sub", "mul", "and", "or", "xor", "shr", "shl", "min",
+        "max", "abs", "gt", "lt", "eq", "ne", "ge", "le", "mux", "pass",
+        "steer", "sel", "phi",
+    )
+}
+
+
 @dataclass
 class TimingModel:
     """Worst-case component delays, keyed the way application STA consumes them."""
@@ -60,6 +74,11 @@ class TimingModel:
         return self.entries[key]
 
     def core_delay(self, kind: str, op: str = "") -> float:
+        if kind == "pe" and op:
+            key = PE_OP_DELAY_CLASS.get(op)
+            if key is None:
+                raise KeyError(f"PE op {op!r} has no delay class")
+            return self.entries[key]
         key = {
             "pe": "core_pe", "mem": "core_mem", "rf": "core_rf",
             "fifo": "core_fifo", "io": "core_io",

@@ -65,6 +65,62 @@ def random_dfg(draw):
     return g.validate()
 
 
+CMPS = ["gt", "lt", "eq", "ne", "ge", "le"]
+
+
+@st.composite
+def random_pred_dfg(draw):
+    """``random_dfg`` extended with comparators, mux, and the predicated
+    merge ops (steer/sel/phi on a PRED_PORT-band edge, predicated accum)."""
+    from repro.core.dfg import PRED_PORT
+
+    g = DFG("pred_prop")
+    n_in = draw(st.integers(2, 3))
+    srcs = [g.add(INPUT, name=f"in{i}") for i in range(n_in)]
+    n_ops = draw(st.integers(2, 14))
+    for i in range(n_ops):
+        kind = draw(st.sampled_from(
+            ["pe"] * 4 + ["cmp"] * 2 + ["mux", "steer", "sel", "phi",
+                                        "pacc", "delay"]))
+        pick = lambda: draw(st.sampled_from(srcs))
+        if kind == "pe":
+            n = g.add(PE, op=draw(st.sampled_from(BINOPS)))
+            g.connect(pick(), n, port=0)
+            g.connect(pick(), n, port=1)
+        elif kind == "cmp":
+            n = g.add(PE, op=draw(st.sampled_from(CMPS)))
+            g.connect(pick(), n, port=0)
+            g.connect(pick(), n, port=1)
+        elif kind == "mux":
+            n = g.add(PE, op="mux")
+            for p in range(3):
+                g.connect(pick(), n, port=p)
+        elif kind in ("sel", "phi"):
+            n = g.add(PE, op=kind)
+            g.connect(pick(), n, port=0)
+            g.connect(pick(), n, port=1)
+            g.connect(pick(), n, port=PRED_PORT)
+        elif kind == "steer":
+            n = g.add(PE, op="steer")
+            g.connect(pick(), n, port=0)
+            g.connect(pick(), n, port=PRED_PORT)
+        elif kind == "pacc":
+            n = g.add(MEM, op="accum", latency=1)
+            g.connect(pick(), n)
+            g.connect(pick(), n, port=PRED_PORT)
+        else:
+            n = g.add(MEM, op="delay", depth=draw(st.integers(1, 3)),
+                      latency=1)
+            g.connect(pick(), n)
+        srcs.append(n)
+    sinks = [n for n in g.nodes if not g.succs(n) and
+             g.nodes[n].kind != OUTPUT]
+    for i, s in enumerate(sinks):
+        o = g.add(OUTPUT, name=f"out{i}")
+        g.connect(s, o)
+    return g.validate()
+
+
 def _inputs_for(g, seed=0, n=48):
     rng = np.random.default_rng(seed)
     return {name: rng.integers(0, 255, size=n).tolist()

@@ -1,0 +1,375 @@
+"""Predicated control flow through the IR (PR 10).
+
+Covers the predication contract end to end:
+
+- interpreter oracle semantics for steer/sel/phi and predicated MEM
+  accumulators (dense and sparse firing rules);
+- the ``validate()`` port-band contract (predicate band is 1-bit, at most
+  one predicate per node, only merge ops/accums accept one);
+- 3-backend bit-identity (interpreter / numpy / jax) on the predicated
+  benchmark apps and on seeded random predicated DAGs — the seeded fuzz
+  runs even where ``hypothesis`` is absent;
+- functional preservation of the pipelining transforms on predicated
+  graphs, plus ``check_predicated_regions`` arm-balance diagnostics;
+- end-to-end compiles of the CONTROL_APPS through the full pass flow;
+- a byte-identity regression pinning the straight-line apps' placement/
+  route/branch digests to their pre-predication values.
+"""
+
+import hashlib
+import random
+
+import pytest
+
+from repro.core import CONTROL_APPS, DENSE_APPS, equivalent, simulate
+from repro.core.apps import ALL_APPS
+from repro.core.branch_delay import (check_matched_dfg,
+                                     check_predicated_regions,
+                                     predicated_merge_nodes)
+from repro.core.broadcast import broadcast_pipelining
+from repro.core.compiler import CascadeCompiler, PassConfig
+from repro.core.dfg import (CONTROL_PORT, DFG, INPUT, MEM, OUTPUT, PE,
+                            PE_ARITY, PE_OPS, PRED_OPS, PRED_PORT, REG)
+from repro.core.pipelining import compute_pipelining
+from repro.core.sim import simulate_sparse
+from repro.core.timing_model import PE_OP_DELAY_CLASS, TECH_NS
+
+VEC_BACKENDS = ("numpy", "jax")
+
+
+# ---------------------------------------------------------------------------
+# interpreter oracle semantics
+# ---------------------------------------------------------------------------
+
+
+def _merge_graph(op):
+    """a, b, p -> op(a, b; pred=p) -> out (steer drops the b input)."""
+    g = DFG(f"oracle_{op}")
+    a = g.add(INPUT, name="a")
+    b = g.add(INPUT, name="b")
+    p = g.add(INPUT, name="p")
+    n = g.add(PE, op=op)
+    g.connect(a, n, port=0)
+    if op != "steer":
+        g.connect(b, n, port=1)
+    g.connect(p, n, port=PRED_PORT)
+    o = g.add(OUTPUT, name="out")
+    g.connect(n, o)
+    return g.validate()
+
+
+def test_steer_gates_value_to_zero():
+    g = _merge_graph("steer")
+    ins = {"a": [5, 6, 7, 8], "b": [0] * 4, "p": [1, 0, 3, 2]}
+    assert simulate(g, ins, 4)["out"] == [5, 0, 7, 0]
+
+
+@pytest.mark.parametrize("op", ["sel", "phi"])
+def test_sel_phi_pick_by_predicate_lsb(op):
+    g = _merge_graph(op)
+    ins = {"a": [10, 11, 12, 13], "b": [20, 21, 22, 23], "p": [1, 0, 2, 5]}
+    assert simulate(g, ins, 4)["out"] == [10, 21, 22, 13]
+
+
+def test_comparators_produce_boolean_lattice():
+    g = DFG("cmp")
+    a = g.add(INPUT, name="a")
+    b = g.add(INPUT, name="b")
+    for op in ("eq", "ne", "ge", "le", "gt", "lt"):
+        n = g.add(PE, op=op)
+        g.connect(a, n, port=0)
+        g.connect(b, n, port=1)
+        o = g.add(OUTPUT, name=f"o_{op}")
+        g.connect(n, o)
+    g.validate()
+    out = simulate(g, {"a": [3, 7, 7], "b": [7, 7, 3]}, 3)
+    assert out["o_eq"] == [0, 1, 0]
+    assert out["o_ne"] == [1, 0, 1]
+    assert out["o_ge"] == [0, 1, 1]
+    assert out["o_le"] == [1, 1, 0]
+    assert out["o_gt"] == [0, 0, 1]
+    assert out["o_lt"] == [1, 0, 0]
+
+
+def _pred_accum_graph():
+    g = DFG("pacc")
+    x = g.add(INPUT, name="x")
+    p = g.add(INPUT, name="p")
+    acc = g.add(MEM, name="acc", op="accum", latency=1)
+    g.connect(x, acc)
+    g.connect(p, acc, port=PRED_PORT)
+    o = g.add(OUTPUT, name="out")
+    g.connect(acc, o)
+    return g.validate()
+
+
+def test_predicated_accum_holds_state_on_false():
+    g = _pred_accum_graph()
+    out = simulate(g, {"x": [1, 2, 4, 8], "p": [1, 0, 1, 0]}, 4)["out"]
+    # latency-1 accumulator: output trails the sampled state by one cycle;
+    # disabled cycles hold (1, then 1+4=5)
+    assert out == [0, 1, 1, 5]
+
+
+def test_sparse_predicated_accum_emits_held_value():
+    g = _pred_accum_graph()
+    out = simulate_sparse(g, {"x": [3, 5, 9], "p": [1, 0, 1]}, 64)["out"]
+    # false predicate still consumes the token and re-emits the held sum
+    assert out == [3, 3, 12]
+
+
+def test_unpredicated_merge_missing_pred_rejected():
+    g = DFG("nopred")
+    a = g.add(INPUT, name="a")
+    b = g.add(INPUT, name="b")
+    n = g.add(PE, op="sel")
+    g.connect(a, n, port=0)
+    g.connect(b, n, port=1)
+    with pytest.raises(ValueError, match="requires a predicate edge"):
+        g.validate()
+
+
+# ---------------------------------------------------------------------------
+# validate(): the port-band contract
+# ---------------------------------------------------------------------------
+
+
+def test_predicate_band_edges_are_one_bit():
+    g = _merge_graph("sel")
+    assert all(e.width == 1 for e in g.edges
+               if PRED_PORT <= e.port < CONTROL_PORT)
+
+
+def test_wide_predicate_edge_rejected():
+    g = _merge_graph("sel")
+    bad = [e for e in g.edges if e.port == PRED_PORT][0]
+    g.edges.remove(bad)
+    g.connect(bad.src, bad.dst, port=PRED_PORT, width=16)
+    with pytest.raises(ValueError, match="must be 1 bit wide"):
+        g.validate()
+
+
+def test_wide_control_edge_rejected():
+    g = DFG("ctrl")
+    a = g.add(INPUT, name="a")
+    b = g.add(PE, op="abs")
+    g.connect(a, b, port=0)
+    o = g.add(OUTPUT, name="o")
+    g.connect(b, o)
+    g.connect(a, b, port=CONTROL_PORT, width=16)
+    with pytest.raises(ValueError, match="1-bit side-band"):
+        g.validate()
+
+
+def test_double_predicate_rejected():
+    g = _merge_graph("sel")
+    n = [e.dst for e in g.edges if e.port == PRED_PORT][0]
+    g.connect("a", n, port=PRED_PORT + 1)
+    with pytest.raises(ValueError, match="predicate"):
+        g.validate()
+
+
+def test_predicate_on_plain_op_rejected():
+    g = DFG("plainpred")
+    a = g.add(INPUT, name="a")
+    b = g.add(INPUT, name="b")
+    n = g.add(PE, op="add")
+    g.connect(a, n, port=0)
+    g.connect(b, n, port=1)
+    g.connect(b, n, port=PRED_PORT)
+    o = g.add(OUTPUT, name="o")
+    g.connect(n, o)
+    with pytest.raises(ValueError, match="cannot take a predicate edge"):
+        g.validate()
+
+
+# ---------------------------------------------------------------------------
+# PE_OPS audit: every op has an arity and a timing-model delay class
+# ---------------------------------------------------------------------------
+
+
+def test_every_pe_op_has_arity_and_delay_class():
+    for op in PE_OPS:
+        arity = PE_ARITY.get(op, 2)
+        assert 1 <= arity <= 3, (op, arity)
+        key = PE_OP_DELAY_CLASS.get(op)
+        assert key is not None, f"PE op {op!r} missing a delay class"
+        assert key in TECH_NS, (op, key)
+
+
+def test_pred_ops_take_trailing_predicate_argument():
+    # PRED_OPS lambdas take (data..., pred): arity data args + 1
+    for op in PRED_OPS:
+        fn = PE_OPS[op]
+        assert fn.__code__.co_argcount == PE_ARITY[op] + 1, op
+
+
+# ---------------------------------------------------------------------------
+# 3-backend bit identity on the predicated benchmark apps + seeded fuzz
+# ---------------------------------------------------------------------------
+
+
+def _dense_inputs(g, cycles, seed=0):
+    rng = random.Random(seed)
+    return {n: [rng.randrange(0x10000) for _ in range(cycles)]
+            for n, nd in g.nodes.items() if nd.kind == INPUT}
+
+
+@pytest.mark.parametrize("backend", VEC_BACKENDS)
+@pytest.mark.parametrize("app", sorted(CONTROL_APPS))
+def test_backends_bit_identical_on_control_apps(app, backend):
+    g = CONTROL_APPS[app].build(1)
+    cycles = 96
+    ins = _dense_inputs(g, cycles)
+    ref = simulate(g, ins, cycles)
+    assert simulate(g, ins, cycles, backend=backend) == ref
+
+
+def _seeded_pred_dfg(seed):
+    """Deterministic random predicated DAG (no hypothesis dependency)."""
+    rng = random.Random(seed)
+    g = DFG(f"fuzz{seed}")
+    srcs = [g.add(INPUT, name=f"in{i}") for i in range(rng.randint(2, 3))]
+    cmps = ["gt", "lt", "eq", "ne", "ge", "le"]
+    for i in range(rng.randint(3, 12)):
+        kind = rng.choice(["bin"] * 3 + ["cmp", "mux", "steer", "sel",
+                                         "phi", "pacc"])
+        pick = lambda: rng.choice(srcs)
+        if kind == "bin":
+            n = g.add(PE, op=rng.choice(["add", "sub", "mul", "xor",
+                                         "min", "max"]))
+            g.connect(pick(), n, port=0)
+            g.connect(pick(), n, port=1)
+        elif kind == "cmp":
+            n = g.add(PE, op=rng.choice(cmps))
+            g.connect(pick(), n, port=0)
+            g.connect(pick(), n, port=1)
+        elif kind == "mux":
+            n = g.add(PE, op="mux")
+            for p in range(3):
+                g.connect(pick(), n, port=p)
+        elif kind in ("sel", "phi"):
+            n = g.add(PE, op=kind)
+            g.connect(pick(), n, port=0)
+            g.connect(pick(), n, port=1)
+            g.connect(pick(), n, port=PRED_PORT)
+        elif kind == "steer":
+            n = g.add(PE, op="steer")
+            g.connect(pick(), n, port=0)
+            g.connect(pick(), n, port=PRED_PORT)
+        else:
+            n = g.add(MEM, name=f"acc{i}", op="accum", latency=1)
+            g.connect(pick(), n)
+            g.connect(pick(), n, port=PRED_PORT)
+        srcs.append(n)
+    for i, s in enumerate([n for n in g.nodes if not g.succs(n)
+                           and g.nodes[n].kind != OUTPUT]):
+        o = g.add(OUTPUT, name=f"out{i}")
+        g.connect(s, o)
+    return g.validate()
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_backends_match_interpreter_on_seeded_pred_dags(seed):
+    g = _seeded_pred_dfg(seed)
+    ins = _dense_inputs(g, 32, seed=seed)
+    ref = simulate(g, ins, 32)
+    for backend in VEC_BACKENDS:
+        assert simulate(g, ins, 32, backend=backend) == ref, backend
+
+
+# ---------------------------------------------------------------------------
+# pipelining transforms preserve predicated function; arm balance checks
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_pipelining_preserves_predicated_function(seed):
+    g = _seeded_pred_dfg(seed)
+    ref = g.copy()
+    compute_pipelining(g, rf_threshold=3)
+    broadcast_pipelining(g, fanout_threshold=3, arity=2)
+    assert check_matched_dfg(g)
+    assert check_predicated_regions(g) == []
+    assert equivalent(ref, g, _dense_inputs(ref, 32, seed=seed), n=32)
+
+
+def test_predicated_merge_nodes_found():
+    g = CONTROL_APPS["thresh_conv"].build(1)
+    merges = predicated_merge_nodes(g)
+    assert merges, "thresh_conv should contain predicated merges"
+    ops = {g.nodes[m].op for m in merges}
+    assert ops & (PRED_OPS | {"accum"})
+
+
+def test_check_predicated_regions_flags_unbalanced_arms():
+    g = _merge_graph("sel")
+    # skew one arm: insert a register on the a->sel edge only
+    e = [e for e in g.edges if e.port == 0][0]
+    g.split_edge(e, REG)
+    problems = check_predicated_regions(g)
+    assert problems and any("sel" in p for p in problems)
+    # rebalancing via the matching pass clears the diagnostics
+    compute_pipelining(g, rf_threshold=3)
+    assert check_predicated_regions(g) == []
+
+
+# ---------------------------------------------------------------------------
+# end-to-end compiles of the predicated apps
+# ---------------------------------------------------------------------------
+
+
+def test_control_apps_registered():
+    assert set(CONTROL_APPS) == {"thresh_conv", "clip_pipe", "refine"}
+    assert set(CONTROL_APPS) <= set(ALL_APPS)
+    assert not set(CONTROL_APPS) & set(DENSE_APPS)
+
+
+@pytest.mark.parametrize("app", sorted(CONTROL_APPS))
+def test_predicated_app_compiles_end_to_end(app):
+    r = CascadeCompiler().compile(CONTROL_APPS[app],
+                                  PassConfig.full(place_moves=40),
+                                  verify=True)
+    assert r.sta.critical_path_ns > 0
+    assert any(PRED_PORT <= b.port < CONTROL_PORT
+               for b in r.design.netlist.branches), \
+        f"{app}: no predicate-band branches in the netlist"
+
+
+# ---------------------------------------------------------------------------
+# straight-line byte-identity regression
+# ---------------------------------------------------------------------------
+
+# Pinned before the predication refactor landed: the pred band is empty in
+# every straight-line app, so placement, routing, register insertion, and
+# branch extraction must be byte-identical to the pre-refactor flow.
+STRAIGHT_LINE_PINS = {
+    "gaussian": ("a3a27512474fe9396edeb6f63f642286873820b92ee2701b95b0b98dae1f81f3",
+                 1.375, 62),
+    "unsharp": ("f51ce187b41722194946e24ed3fc93e9ab044bb59a2bb0eaee081e4ba152eaef",
+                1.47, 91),
+    "harris": ("1bd4154ffbd6ad87d2b51b31c4b8831d96ac0883aa7aecd0eeec371981153b01",
+               2.005, 228),
+}
+
+
+def _design_digest(design):
+    h = hashlib.sha256()
+    for name in sorted(design.placement):
+        h.update(f"P {name} {design.placement[name]}\n".encode())
+    for key in sorted(design.routes, key=repr):
+        rb = design.routes[key]
+        h.update(f"R {key} {rb.hops} {sorted(rb.reg_hops)}\n".encode())
+    for b in sorted(design.netlist.branches, key=lambda b: repr(b.key)):
+        h.update(f"B {b.key} {b.n_regs} {b.width} {b.control}\n".encode())
+    return h.hexdigest()
+
+
+@pytest.mark.parametrize("app", sorted(STRAIGHT_LINE_PINS))
+def test_straight_line_apps_byte_identical(app):
+    digest, cp, regs = STRAIGHT_LINE_PINS[app]
+    r = CascadeCompiler().compile(DENSE_APPS[app],
+                                  PassConfig.full(place_moves=40))
+    assert round(r.sta.critical_path_ns, 6) == cp
+    assert r.design.physical_register_count() == regs
+    assert _design_digest(r.design) == digest

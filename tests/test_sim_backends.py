@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from _hypothesis_compat import given, settings, st
-from test_cascade_core import _inputs_for, random_dfg
+from test_cascade_core import _inputs_for, random_dfg, random_pred_dfg
 
 from repro.core import (DENSE_APPS, SPARSE_APPS, SIM_BACKENDS,
                         SimLoweringError, clear_ref_memo, equivalent,
@@ -71,6 +71,17 @@ def test_dense_backend_deterministic_across_calls(backend):
 def test_dense_backends_match_interpreter_on_random_dags(g, seed):
     """Property: on random matched DAGs every vectorized backend's output
     streams are byte-equal to the interpreter's."""
+    ins = _inputs_for(g, seed, n=32)
+    ref = simulate(g, ins, 32)
+    for backend in VEC_BACKENDS:
+        assert simulate(g, ins, 32, backend=backend) == ref, backend
+
+
+@settings(max_examples=25, deadline=None)
+@given(random_pred_dfg(), st.integers(0, 3))
+def test_dense_backends_match_interpreter_on_predicated_dags(g, seed):
+    """Property: comparators, mux, steer/sel/phi, and predicated
+    accumulators lower bit-identically to the interpreter oracle."""
     ins = _inputs_for(g, seed, n=32)
     ref = simulate(g, ins, 32)
     for backend in VEC_BACKENDS:
